@@ -1,0 +1,81 @@
+"""Unsupervised anomaly detection with Chimera primitives (paper §4.7):
+an autoencoder over backbone features, trained on benign traffic only;
+detection by reconstruction error + the hard-rule cascade on top.
+
+    PYTHONPATH=src python examples/anomaly_detection.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import auc, tiny_backbone
+from repro.data.pipeline import PacketStream
+from repro.optim.optimizer import AdamWConfig, adamw_update, init_optimizer
+from repro.train import classifier as C
+
+key = jax.random.PRNGKey(0)
+arch = tiny_backbone()
+ccfg = C.ClassifierConfig(arch=arch, n_classes=8)
+params, _ = C.init_classifier(ccfg, key)
+
+benign = PacketStream(batch_size=32, seed=7, anomaly_rate=0.0, vocab_size=512)
+# Kitsune-style feature autoencoder over the per-flow marker bitmap — the
+# same Partition/Map/SumReduce feature the symbolic path uses (dataplane-
+# computable), reconstructed through a narrow bottleneck
+F = 256
+ae = {"enc": jax.random.normal(key, (F, 16)) / np.sqrt(F),
+      "dec": jax.random.normal(key, (16, F)) / np.sqrt(16)}
+ocfg = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=60)
+opt = init_optimizer(ae, ocfg)
+
+
+def flow_features(batch):
+    """Marker-presence bitmap (B, 256) — Alg. 1's per-flow Partition+SumReduce."""
+    marker = batch["tokens"] - 256
+    onehot = jax.nn.one_hot(jnp.clip(marker, 0, F - 1), F) * (marker >= 0)[..., None]
+    return jnp.minimum(jnp.sum(onehot, axis=1), 1.0)
+
+
+def recon_err(ae, batch):
+    x = flow_features(batch)
+    rec = jax.nn.sigmoid(jnp.tanh(x @ ae["enc"]) @ ae["dec"])
+    # novelty-weighted: present-but-unreconstructable markers score high
+    num = jnp.sum(((rec - x) ** 2) * x, axis=-1)
+    return num / jnp.maximum(jnp.sum(x, axis=-1), 1.0)
+
+
+@jax.jit
+def step(ae, opt, batch):
+    l, g = jax.value_and_grad(lambda a: jnp.mean(recon_err(a, batch)))(ae)
+    ae, opt, _ = adamw_update(ocfg, ae, g, opt)
+    return ae, opt, l
+
+
+print("training AE on benign traffic only...")
+for i in range(60):
+    b = {k: jnp.asarray(v) for k, v in benign.next_batch().items()}
+    ae, opt, l = step(ae, opt, b)
+    if i % 20 == 0:
+        print(f"  step {i:3d}  recon loss {float(l):.4f}")
+
+test = PacketStream(batch_size=256, seed=7, anomaly_rate=0.3, vocab_size=512)
+test.restore({"step": 10_000})  # same generator structure, fresh samples
+tb = {k: jnp.asarray(v) for k, v in test.next_batch().items()}
+scores = np.asarray(jax.jit(recon_err)(ae, tb))
+labels = np.asarray(tb["anomalous"])
+print(f"reconstruction-error AUC: {auc(scores, labels):.4f}")
+
+# cascade: hard signature rules catch known-bad patterns deterministically
+rules = C.default_rules(ccfg, jnp.asarray(test._anomaly_sig))
+sig = C.packet_signature(ccfg, tb["tokens"])
+from repro.core import symbolic
+hard = np.asarray(symbolic.hard_hit(symbolic.ternary_match(sig, rules), rules))
+print(f"hard-rule recall on anomalies: {hard[labels].mean():.2f} "
+      f"(false-hit rate {hard[~labels].mean():.2f})")
+print("combined: veto known-bad at line rate; AE flags the unknown-bad")

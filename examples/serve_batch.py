@@ -1,0 +1,52 @@
+"""End-to-end serving driver (the paper is an inference system, so serving
+is the e2e deliverable): batched requests through the slot engine with
+bounded Chimera state per request.
+
+    PYTHONPATH=src python examples/serve_batch.py [--requests 12 --slots 4]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models import model as M
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--full", action="store_true",
+                    help="full chimera-dataplane config (slower on CPU)")
+    args = ap.parse_args()
+
+    cfg = get_config("chimera-dataplane") if args.full else smoke_config("chimera-dataplane")
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, batch_slots=args.slots, max_len=512)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        engine.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).tolist(),
+            max_new_tokens=args.max_new,
+        ))
+    t0 = time.perf_counter()
+    ticks = 0
+    while engine.pending or any(r is not None for r in engine.active):
+        engine.step()
+        ticks += 1
+    dt = time.perf_counter() - t0
+    tokens = args.requests * (args.prompt_len + args.max_new)
+    print(f"{args.requests} requests · {tokens} tokens · {args.slots} slots")
+    print(f"{dt:.2f}s total · {tokens/dt:.0f} tok/s · {ticks} engine ticks")
+    print("per-request state is bounded (ring L + (S,Z)) — context-length-free")
+
+
+if __name__ == "__main__":
+    main()

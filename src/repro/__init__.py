@@ -1,0 +1,11 @@
+"""repro — production-grade JAX framework reproducing *Chimera:
+Neuro-Symbolic Attention Primitives for Trustworthy Dataplane Intelligence*.
+
+The paper's contribution (linearized streaming attention with bounded state,
+two-layer key selection, cascade neuro-symbolic fusion, two-timescale
+adaptation, fixed-point resource modelling) lives in :mod:`repro.core` and is
+integrated as a first-class attention feature across all supported
+architectures (:mod:`repro.configs`).
+"""
+
+__version__ = "1.0.0"

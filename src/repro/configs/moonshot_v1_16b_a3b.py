@@ -1,0 +1,24 @@
+"""Moonshot-v1-16B-A3B [hf:moonshotai/Moonlight-16B-A3B] — MoE 64e top-6
+with 2 shared experts (expert d_ff=1408).
+
+Fidelity note (DESIGN.md §5): Moonlight's first dense layer is folded into
+the uniform MoE pattern so the 48-layer stack scans homogeneously; the
+shared experts (2 x 1408) carry the dense path."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=11264,
+    vocab_size=163840,
+    moe_experts=64,
+    moe_top_k=6,
+    moe_d_ff=1408,
+    moe_shared_experts=2,
+    rope_theta=5e4,
+)

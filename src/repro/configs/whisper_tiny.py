@@ -1,0 +1,18 @@
+"""Whisper-tiny [arXiv:2212.04356] — enc-dec audio backbone; the conv
+frontend is a STUB (input_specs provides precomputed frame embeddings)."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,  # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    norm_type="layernorm",
+    rope_theta=1e4,
+)

@@ -1,0 +1,20 @@
+"""xLSTM-125M [arXiv:2405.04517] — alternating mLSTM/sLSTM blocks, d_ff=0
+(the xLSTM blocks carry their own up/down projections).
+
+The mLSTM matrix memory IS the paper's Eq. 9 incremental state with gating
+(DESIGN.md §5); natively sub-quadratic, so long_500k runs without Chimera."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm", "slstm"),
+    use_chimera=False,  # attention-free: the technique is inapplicable
+)

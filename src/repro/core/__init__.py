@@ -1,0 +1,16 @@
+"""Chimera core: the paper's contribution as composable JAX modules."""
+
+from repro.core import (  # noqa: F401
+    annotate,
+    chimera_attention,
+    feature_maps,
+    fusion,
+    hardware_model,
+    key_selection,
+    linear_attention,
+    primitives,
+    quantization,
+    state_quant,
+    symbolic,
+    two_timescale,
+)

@@ -1,0 +1,36 @@
+"""Activation-sharding annotation hook.
+
+Core modules and models call :func:`constrain` with *logical* dim names;
+the runtime (repro.runtime.sharding) installs a resolver that maps them to
+``with_sharding_constraint`` under the active mesh/rules.  Outside a
+distributed launch the hook is the identity, so core stays dependency-free.
+
+GSPMD propagates most shardings automatically but loses them at scan-carry
+boundaries (the inner Chimera state (S, Z) would otherwise replicate and
+drag per-chunk all-gathers into every layer); the explicit constraints here
+are load-bearing for the memory/collective rooflines.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+_HOOK = None
+
+
+def install(fn) -> None:
+    global _HOOK
+    _HOOK = fn
+
+
+def clear() -> None:
+    global _HOOK
+    _HOOK = None
+
+
+def constrain(x: jax.Array, names: Tuple[Optional[str], ...]) -> jax.Array:
+    if _HOOK is None:
+        return x
+    return _HOOK(x, names)

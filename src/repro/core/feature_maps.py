@@ -1,0 +1,171 @@
+"""Kernel feature maps φ for linearized attention (paper Eq. 5, Thm A.1).
+
+φ must satisfy exp(qᵀk/√d) ≈ φ(q)ᵀφ(k), be cheap, and admit quantization /
+table compilation.  We provide:
+
+* ``elu1``   — φ(x) = elu(x)+1 (classic linear-attention map; positive,
+  bounded gradient; m = d or a fixed random projection to m).
+* ``relu``   — φ(x) = relu(x) (+ projection).
+* ``exp_prf``— Performer-style positive random features, the paper's
+  Thm A.1 construction: unbiased for the exp kernel with the Hoeffding
+  m ≥ (2C²/ε²)·log(2N/δ) guarantee.
+* ``codebook`` — the dataplane "fuzzy Map table": inputs are vector-quantized
+  to ``codebook_size`` centroids and φ is a (optionally fixed-point) table
+  gather.  Compiled offline from a base map by the two-timescale control
+  plane (:mod:`repro.core.two_timescale`), exactly the paper's SRAM-table
+  deployment path.
+
+Inputs are L2-normalized and rescaled to ``input_scale`` before the map, so
+‖x‖ ≤ R and ‖φ(x)‖ ≤ B_φ hold by construction (Eq. 21's preprocessing
+assumption); this also keeps the exact-exp local window path numerically safe
+without per-row max subtraction (|qᵀk| ≤ R² ⇒ exp is bounded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureMapConfig:
+    kind: str = "elu1"  # elu1 | relu | exp_prf | codebook
+    m: int = 0  # feature dim; 0 means "same as input d" (elu1/relu only)
+    input_scale: float = 2.0  # R: post-normalization norm (R² = max logit)
+    codebook_size: int = 256
+    codebook_bits: int = 0  # 0 = fp32 table; 8/16 = fixed-point table
+    orthogonal: bool = True  # orthogonalize random-feature rows (exp_prf)
+
+    def feature_dim(self, d: int) -> int:
+        return self.m if self.m > 0 else d
+
+
+def _normalize(x: jax.Array, scale: float) -> jax.Array:
+    # norm in fp32 for stability, output in the input dtype (keeping the
+    # activation bf16 halves the Chimera path's HBM footprint)
+    n = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True))
+    return x * (scale / jnp.maximum(n, 1e-6)).astype(x.dtype)
+
+
+def _orthogonal_gaussian(key: jax.Array, m: int, d: int) -> jax.Array:
+    """Block-orthogonal Gaussian matrix (Performer's ORF construction)."""
+    blocks = []
+    n_blocks = math.ceil(m / d)
+    keys = jax.random.split(key, n_blocks)
+    for bk in keys:
+        g = jax.random.normal(bk, (d, d))
+        q, _ = jnp.linalg.qr(g)
+        # rescale rows to chi(d) norms so marginals match N(0, I_d) rows
+        norms = jnp.linalg.norm(jax.random.normal(bk, (d, d)), axis=-1)
+        blocks.append(q * norms[:, None])
+    return jnp.concatenate(blocks, axis=0)[:m]
+
+
+def init_feature_map(cfg: FeatureMapConfig, d: int, key: jax.Array) -> Params:
+    m = cfg.feature_dim(d)
+    if cfg.kind in ("elu1", "relu"):
+        if m == d:
+            return {}
+        # fixed (non-learned) projection so the map stays table-compilable
+        proj = jax.random.normal(key, (d, m)) / math.sqrt(d)
+        return {"proj": proj}
+    if cfg.kind == "exp_prf":
+        if cfg.orthogonal and m % 1 == 0:
+            w = _orthogonal_gaussian(key, m, d)
+        else:
+            w = jax.random.normal(key, (m, d))
+        return {"w": w}
+    if cfg.kind == "codebook":
+        k1, k2 = jax.random.split(key)
+        centroids = jax.random.normal(k1, (cfg.codebook_size, d))
+        table = jax.nn.elu(jax.random.normal(k2, (cfg.codebook_size, m))) + 1.0
+        return {"centroids": centroids, "table": table, "table_scale": jnp.ones(())}
+    raise ValueError(f"unknown feature map kind {cfg.kind!r}")
+
+
+def apply_feature_map(cfg: FeatureMapConfig, params: Params, x: jax.Array) -> jax.Array:
+    """x: (..., d) -> φ(x): (..., m).  Always strictly positive outputs."""
+    xh = _normalize(x, cfg.input_scale)
+    if cfg.kind in ("elu1", "relu"):
+        z = xh @ params["proj"] if "proj" in params else xh
+        if cfg.kind == "elu1":
+            return jax.nn.elu(z) + 1.0
+        return jax.nn.relu(z) + 1e-6
+    if cfg.kind == "exp_prf":
+        w = params["w"]
+        m = w.shape[0]
+        # approximate exp(qᵀk/√d): feed x/ d^{1/4} so <q',k'> = qᵀk/√d
+        d = x.shape[-1]
+        xs = xh / (d ** 0.25)
+        sq = 0.5 * jnp.sum(xs * xs, axis=-1, keepdims=True)
+        # exponent bounded: |w·xs| ≤ ‖w‖·R/d^{1/4}; inputs are normalized so
+        # no data-dependent stabilizer is required (see module docstring).
+        return jnp.exp(xs @ w.T - sq) / math.sqrt(m)
+    if cfg.kind == "codebook":
+        codes = assign_codes(params["centroids"], xh)
+        table = params["table"]
+        if cfg.codebook_bits:
+            table = table.astype(jnp.float32) * params["table_scale"]
+        return jnp.take(table, codes, axis=0)
+    raise ValueError(f"unknown feature map kind {cfg.kind!r}")
+
+
+def assign_codes(centroids: jax.Array, x: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment (the dataplane's fuzzy-index Map lookup)."""
+    # ‖x - c‖² = ‖x‖² - 2xᵀc + ‖c‖²; ‖x‖² constant per row
+    dots = x @ centroids.T
+    c2 = jnp.sum(centroids * centroids, axis=-1)
+    return jnp.argmin(c2 - 2.0 * dots, axis=-1)
+
+
+def phi_norm_bound(cfg: FeatureMapConfig, d: int) -> float:
+    """Analytic B_φ (Eq. 21) for overflow sizing (Thm A.3)."""
+    m = cfg.feature_dim(d)
+    r = cfg.input_scale
+    if cfg.kind == "elu1":
+        return math.sqrt(m) * (r + 1.0)
+    if cfg.kind == "relu":
+        return r + 1e-6
+    if cfg.kind == "exp_prf":
+        # per-feature exp(‖w_i‖ r / d^{1/4}) / sqrt(m); use 3σ row norm
+        wnorm = math.sqrt(d) + 3.0
+        return math.exp(wnorm * r / d ** 0.25)
+    if cfg.kind == "codebook":
+        return math.sqrt(m) * (r + 1.0)
+    raise ValueError(cfg.kind)
+
+
+def compile_codebook(
+    cfg: FeatureMapConfig,
+    base_cfg: FeatureMapConfig,
+    base_params: Params,
+    samples: jax.Array,
+    key: jax.Array,
+    kmeans_iters: int = 10,
+) -> Params:
+    """Compile a smooth feature map into a codebook table (control-plane op).
+
+    This is the paper's offline "mapping table construction": cluster observed
+    (normalized) inputs, evaluate the base φ at each centroid, store the
+    results as the Map table (optionally fixed-point per Eq. 19 budgets).
+    """
+    from repro.core.two_timescale import kmeans  # local import, no cycle at module load
+
+    xh = _normalize(samples.reshape(-1, samples.shape[-1]), cfg.input_scale)
+    centroids, _ = kmeans(xh, cfg.codebook_size, kmeans_iters, key)
+    table = apply_feature_map(base_cfg, base_params, centroids)
+    table_scale = jnp.ones(())
+    if cfg.codebook_bits:
+        from repro.core.quantization import quantize_per_channel
+
+        qt = quantize_per_channel(table, cfg.codebook_bits, axis=None)
+        # store dequantized-at-rest for CPU-side simplicity; scale retained
+        table = qt.values
+        table_scale = qt.scale
+    return {"centroids": centroids, "table": table, "table_scale": table_scale}

@@ -1,0 +1,57 @@
+"""Cascade neuro-symbolic fusion (paper Eq. 15).
+
+S = 1                          if 𝕀_sym = 1 and λ_h = 1   (hard veto)
+    σ(α·s_nn + β·s_sym)        otherwise                   (soft blend)
+
+On the switch this is conditional MAT execution (TCAM first, SRAM second);
+on TPU we compute it branch-free with predication (`jnp.where`), which
+preserves the trust property — the hard path is a deterministic function of
+the TCAM tier only, independent of the neural value.  Gradients flow only
+through the soft branch (the hard branch is constant), matching the paper's
+training setup where hard rules are not differentiable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionConfig:
+    lambda_h: bool = True  # whether a hard symbolic hit vetoes the neural path
+    alpha_init: float = 1.0
+    beta_init: float = 1.0
+
+
+def init_fusion(cfg: FusionConfig):
+    return {
+        "alpha": jnp.asarray(cfg.alpha_init, jnp.float32),
+        "beta": jnp.asarray(cfg.beta_init, jnp.float32),
+    }
+
+
+def cascade_fusion(
+    params,
+    s_nn: jax.Array,
+    s_sym: jax.Array,
+    hard: jax.Array,  # bool (...,) — 𝕀_sym
+    lambda_h: bool = True,
+) -> jax.Array:
+    """Eq. 15, vectorized and branch-free."""
+    soft = jax.nn.sigmoid(params["alpha"] * s_nn + params["beta"] * s_sym)
+    if not lambda_h:
+        return soft
+    return jnp.where(hard, jnp.ones_like(soft), soft)
+
+
+def fusion_is_trustworthy(
+    params, s_nn: jax.Array, s_sym: jax.Array, hard: jax.Array
+) -> jax.Array:
+    """The verifiable safety property: whenever a hard rule fires the output
+    is exactly 1 regardless of neural evidence.  Exposed as a function so
+    property tests (and, in deployment, runtime monitors) can assert it."""
+    out = cascade_fusion(params, s_nn, s_sym, hard, lambda_h=True)
+    return jnp.where(hard, out == 1.0, True)

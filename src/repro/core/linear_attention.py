@@ -1,0 +1,168 @@
+"""Linearized attention with incremental bounded state (paper Eqs. 5-10).
+
+All functions use the (B, H, T, D) layout.  Three mathematically equivalent
+formulations are provided:
+
+* ``recurrent_linear_attention`` — the paper-faithful per-token stateful-ALU
+  form: S_t = S_{t-1} + φ(k_t)v_tᵀ, Z_t = Z_{t-1} + φ(k_t) (Eqs. 9-10), with
+  readout o_t = φ(q_t)ᵀS_t / (φ(q_t)ᵀZ_t + γ) (Eq. 6).  This is the faithful
+  baseline and the decode-time semantics.
+* ``chunked_linear_attention`` — identical math reorganized into
+  Partition/Map/SumReduce tiles: exact intra-chunk causal attention in the
+  φ-kernel space plus carried (S, Z) inter-chunk state.  This is the
+  performance formulation the Pallas kernel implements.
+* ``linear_attention_readout`` — single-token decode readout from (S, Z).
+
+γ is the normalization floor of Thm A.2 (D_ii ≥ γ > 0); because every
+feature map in :mod:`repro.core.feature_maps` is strictly positive, γ only
+guards the t=0 edge.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+State = Tuple[jax.Array, jax.Array]  # S: (..., m, d_v), Z: (..., m)
+
+
+def init_state(batch_shape: tuple, m: int, d_v: int, dtype=jnp.float32) -> State:
+    return (
+        jnp.zeros(batch_shape + (m, d_v), dtype),
+        jnp.zeros(batch_shape + (m,), dtype),
+    )
+
+
+def recurrent_linear_attention(
+    phi_q: jax.Array,  # (B, H, T, m)
+    phi_k: jax.Array,  # (B, H, T, m)
+    v: jax.Array,  # (B, H, T, d_v)
+    state: Optional[State] = None,
+    gamma: float = 1e-6,
+) -> Tuple[jax.Array, State]:
+    """Paper-faithful per-token streaming form (Eqs. 6, 9, 10)."""
+    B, H, T, m = phi_q.shape
+    d_v = v.shape[-1]
+    if state is None:
+        state = init_state((B, H), m, d_v, phi_q.dtype)
+
+    def step(carry: State, xs):
+        S, Z = carry
+        pq, pk, vt = xs  # (B,H,m), (B,H,m), (B,H,d_v)
+        S = S + pk[..., :, None] * vt[..., None, :]
+        Z = Z + pk
+        num = jnp.einsum("bhm,bhmd->bhd", pq, S)
+        den = jnp.einsum("bhm,bhm->bh", pq, Z)
+        out = num / (den[..., None] + gamma)
+        return (S, Z), out
+
+    xs = (
+        jnp.moveaxis(phi_q, 2, 0),
+        jnp.moveaxis(phi_k, 2, 0),
+        jnp.moveaxis(v, 2, 0),
+    )
+    state, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 2), state
+
+
+def chunked_linear_attention(
+    phi_q: jax.Array,
+    phi_k: jax.Array,
+    v: jax.Array,
+    chunk_size: int = 128,
+    state: Optional[State] = None,
+    gamma: float = 1e-6,
+) -> Tuple[jax.Array, State]:
+    """Chunk-parallel form: Partition over time, Map per chunk, SumReduce of
+    carried state.  Bitwise-equal math to the recurrent form up to fp
+    reassociation."""
+    B, H, T, m = phi_q.shape
+    d_v = v.shape[-1]
+    if T % chunk_size != 0:
+        raise ValueError(f"T={T} not divisible by chunk_size={chunk_size}")
+    n_chunks = T // chunk_size
+    if state is None:
+        state = init_state((B, H), m, d_v, phi_q.dtype)
+
+    # Partition: (B, H, n, c, ·)
+    pq = phi_q.reshape(B, H, n_chunks, chunk_size, m)
+    pk = phi_k.reshape(B, H, n_chunks, chunk_size, m)
+    vc = v.reshape(B, H, n_chunks, chunk_size, d_v)
+    causal = jnp.tril(jnp.ones((chunk_size, chunk_size), phi_q.dtype))
+
+    def chunk_step(carry: State, xs):
+        S, Z = carry  # state *before* this chunk
+        q_c, k_c, v_c = xs  # (B,H,c,m), (B,H,c,m), (B,H,c,dv)
+        # intra-chunk: exact causal kernel attention (Map)
+        scores = jnp.einsum("bhim,bhjm->bhij", q_c, k_c) * causal
+        num_intra = jnp.einsum("bhij,bhjd->bhid", scores, v_c)
+        den_intra = jnp.sum(scores, axis=-1)
+        # inter-chunk: readout against carried state
+        num_inter = jnp.einsum("bhim,bhmd->bhid", q_c, S)
+        den_inter = jnp.einsum("bhim,bhm->bhi", q_c, Z)
+        out = (num_intra + num_inter) / (den_intra[..., None] + den_inter[..., None] + gamma)
+        # SumReduce: fold this chunk into the carried state
+        S = S + jnp.einsum("bhjm,bhjd->bhmd", k_c, v_c)
+        Z = Z + jnp.sum(k_c, axis=2)
+        return (S, Z), out
+
+    xs = (
+        jnp.moveaxis(pq, 2, 0),
+        jnp.moveaxis(pk, 2, 0),
+        jnp.moveaxis(vc, 2, 0),
+    )
+    state, outs = jax.lax.scan(chunk_step, state, xs)  # outs: (n,B,H,c,dv)
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, T, d_v)
+    return out, state
+
+
+def linear_attention_readout(
+    phi_q: jax.Array,  # (B, H, m) — single token
+    state: State,
+    gamma: float = 1e-6,
+) -> jax.Array:
+    """Decode-time readout o = φ(q)ᵀS / (φ(q)ᵀZ + γ) (Eq. 6)."""
+    S, Z = state
+    num = jnp.einsum("bhm,bhmd->bhd", phi_q, S)
+    den = jnp.einsum("bhm,bhm->bh", phi_q, Z)
+    return num / (den[..., None] + gamma)
+
+
+def state_update(
+    phi_k: jax.Array,  # (B, H, m) — single token
+    v: jax.Array,  # (B, H, d_v)
+    state: State,
+) -> State:
+    """Single stateful-ALU increment (Eqs. 9-10); the decode fast path."""
+    S, Z = state
+    return (S + phi_k[..., :, None] * v[..., None, :], Z + phi_k)
+
+
+def evicting_state_update(
+    phi_k_new: jax.Array,
+    v_new: jax.Array,
+    phi_k_old: jax.Array,
+    v_old: jax.Array,
+    state: State,
+) -> State:
+    """Windowed variant: add the arriving token, subtract the token leaving
+    the circular buffer (the paper's SRAM circular-overwrite semantics).
+    Keeps the state a strict function of the last L tokens."""
+    S, Z = state
+    S = S + phi_k_new[..., :, None] * v_new[..., None, :] - phi_k_old[..., :, None] * v_old[..., None, :]
+    Z = Z + phi_k_new - phi_k_old
+    return (S, Z)
+
+
+def exact_kernel_attention(
+    phi_q: jax.Array, phi_k: jax.Array, v: jax.Array, gamma: float = 1e-6
+) -> jax.Array:
+    """O(T²) oracle in kernel space: softmax-free normalization with the same
+    φ scores.  Used by tests to check the chunked/recurrent forms exactly."""
+    scores = jnp.einsum("bhim,bhjm->bhij", phi_q, phi_k)
+    T = scores.shape[-1]
+    scores = scores * jnp.tril(jnp.ones((T, T), scores.dtype))
+    den = jnp.sum(scores, axis=-1, keepdims=True)
+    return jnp.einsum("bhij,bhjd->bhid", scores, v) / (den + gamma)

@@ -1,0 +1,74 @@
+"""Dataplane execution primitives: Partition / Map / SumReduce (paper Eqs. 1-3).
+
+These are the paper's (and Pegasus') three dataplane-native primitives.  On a
+programmable switch they correspond to field extraction, fuzzy table lookup
+and staged addition; on TPU they correspond to blocking (Partition), per-block
+elementwise/table compute (Map) and tree reductions (SumReduce).  The Chimera
+attention path (:mod:`repro.core.linear_attention`) is expressed in terms of
+these primitives, and the Pallas kernels realize the same tiling with explicit
+VMEM BlockSpecs.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def partition(x: jax.Array, num_segments: int, axis: int = 0) -> jax.Array:
+    """Partition(X) = {X_1, ..., X_k} (Eq. 1).
+
+    Splits ``x`` along ``axis`` into ``num_segments`` equal segments, returned
+    stacked on a new leading axis so downstream Map/SumReduce stay vectorized.
+    The segment axis is the TPU analogue of MAT pipeline stages.
+    """
+    if x.shape[axis] % num_segments != 0:
+        raise ValueError(
+            f"axis {axis} of length {x.shape[axis]} not divisible into "
+            f"{num_segments} segments"
+        )
+    seg = x.shape[axis] // num_segments
+    moved = jnp.moveaxis(x, axis, 0)
+    parts = moved.reshape((num_segments, seg) + moved.shape[1:])
+    # put the original axis back (now within each segment)
+    return jnp.moveaxis(parts, 1, axis + 1 if axis >= 0 else axis)
+
+
+def map_segments(
+    fn: Callable[[jax.Array], jax.Array] | Sequence[Callable[[jax.Array], jax.Array]],
+    segments: jax.Array,
+) -> jax.Array:
+    """Map(F, {X_i}) = {F_i(X_i)} (Eq. 2).
+
+    ``fn`` is either a single function applied to every segment (vmapped — the
+    homogeneous "fuzzy table" case) or a sequence of per-segment functions
+    (heterogeneous MAT stages).
+    """
+    if callable(fn):
+        return jax.vmap(fn)(segments)
+    fns = list(fn)
+    if len(fns) != segments.shape[0]:
+        raise ValueError(f"{len(fns)} functions for {segments.shape[0]} segments")
+    return jnp.stack([f(segments[i]) for i, f in enumerate(fns)], axis=0)
+
+
+def sum_reduce(ys: jax.Array, axis: int = 0) -> jax.Array:
+    """SumReduce({Y_i}) = sum_i Y_i (Eq. 3)."""
+    return jnp.sum(ys, axis=axis)
+
+
+def partition_map_sumreduce(
+    x: jax.Array,
+    fn: Callable[[jax.Array], jax.Array],
+    num_segments: int,
+    axis: int = 0,
+) -> jax.Array:
+    """Full Partition→Map→SumReduce chain; the canonical dataplane program.
+
+    This is exactly how the linearized-attention aggregates Φ(K)ᵀV and
+    Φ(K)ᵀ1 (Eq. 6) are tiled to fit dataplane memory: per-segment Map(φ)
+    followed by SumReduce of the partial outer products.
+    """
+    return sum_reduce(map_segments(fn, partition(x, num_segments, axis)))

@@ -1,0 +1,113 @@
+"""Fixed-point quantization with overflow accounting (paper §3.3.1, Thm A.3).
+
+The dataplane stores the incremental accumulators S_t ∈ R^{m×d_v} and
+Z_t ∈ R^m in b-bit fixed point (Eq. 7: bits_agg = m·d_v·b).  Theorem A.3
+bounds the accumulated quantization error after T updates by
+``T·B_φ·R_v + T·η_q·m·d_v`` and gives the no-overflow condition Eq. 39:
+``T·B_φ·R_v + T·η_q·m·d_v ≤ 2^{b-1} − 1`` (in quantized units).
+
+On TPU we quantize *storage and traffic* (state caches, compiled tables,
+gradient compression) while MXU accumulation stays fp32; the helpers here are
+shared by the serving state cache, the codebook feature map and the gradient
+compressor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointSpec:
+    """Signed symmetric fixed-point format with ``bits`` total bits."""
+
+    bits: int = 16
+    scale: float = 1.0  # real value represented by one LSB
+
+    @property
+    def max_int(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def min_int(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def dtype(self):
+        return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[self.bits]
+
+    @property
+    def eta_q(self) -> float:
+        """Max per-scalar additive quantization error (round-to-nearest)."""
+        return 0.5 * self.scale
+
+
+def quantize(x: jax.Array, spec: FixedPointSpec, stochastic_key=None) -> jax.Array:
+    """Quantize to fixed point; optionally with stochastic rounding."""
+    scaled = x / spec.scale
+    if stochastic_key is not None:
+        noise = jax.random.uniform(stochastic_key, scaled.shape) - 0.5
+        q = jnp.floor(scaled + 0.5 + noise)
+    else:
+        q = jnp.round(scaled)
+    q = jnp.clip(q, spec.min_int, spec.max_int)
+    return q.astype(spec.dtype)
+
+
+def dequantize(q: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    return q.astype(jnp.float32) * spec.scale
+
+
+def quantization_error_bound(
+    T: int, B_phi: float, R_v: float, spec: FixedPointSpec, m: int, d_v: int
+) -> float:
+    """Frobenius-norm bound of Thm A.3 / Eq. 38 for the accumulator S_T."""
+    return T * B_phi * R_v + T * spec.eta_q * m * d_v
+
+
+def overflow_safe_horizon(B_phi: float, R_v: float, spec: FixedPointSpec) -> int:
+    """Largest per-flow horizon T satisfying the overflow condition (Eq. 39).
+
+    Per-scalar worst-case increment is bounded by ``B_φ·R_v`` (each scalar of
+    the outer product φ(k)vᵀ is at most ‖φ(k)‖·‖v‖), so in quantized units the
+    accumulator after T steps is at most ``T·(B_φ·R_v/scale + 0.5)``.
+    """
+    per_step = B_phi * R_v / spec.scale + 0.5
+    return int(math.floor(spec.max_int / per_step))
+
+
+def check_overflow(
+    T: int, B_phi: float, R_v: float, spec: FixedPointSpec
+) -> bool:
+    """True if T updates provably cannot overflow the accumulator (Eq. 39)."""
+    return T <= overflow_safe_horizon(B_phi, R_v, spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """An int tensor with a (possibly per-channel) fp32 scale."""
+
+    values: jax.Array  # int8/int16
+    scale: jax.Array  # fp32, broadcastable to ``values``
+
+    def dequantize(self) -> jax.Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+
+def quantize_per_channel(x: jax.Array, bits: int, axis: int = -1) -> QuantizedTensor:
+    """Symmetric per-channel quantization (used for state caches & tables).
+
+    The paper's "asymmetric quantization" finding (§4.12: more precision for
+    accumulators than normalization mass) is realized by calling this with
+    different ``bits`` for S and Z.
+    """
+    max_int = 2 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / max_int
+    dtype = {8: jnp.int8, 16: jnp.int16}[bits]
+    q = jnp.clip(jnp.round(x / scale), -max_int - 1, max_int).astype(dtype)
+    return QuantizedTensor(values=q, scale=scale.astype(jnp.float32))

@@ -1,0 +1,105 @@
+"""Quantized Chimera decode state (paper §4.12, Table 4).
+
+The paper's deployment stores the per-flow accumulators in fixed point with
+**asymmetric precision — more bits for the S accumulator than for the
+normalization mass Z** ("allocating higher precision to accumulators than to
+normalization mass ... prevents accumulator overflow without compromising
+flow capacity").  This module provides that storage format for the serving
+state cache: S in int16, Z in int8 (configurable), per-(batch, head)
+scales, with the ring buffers kept bf16 (they are exact-readout operands).
+
+HBM savings per flow vs fp32 state: S 2x, Z 4x — at 32k-context decode the
+state cache is the dominant memory stream (EXPERIMENTS.md §Perf A2), so
+this directly moves the decode memory roofline term.
+
+Round-trip error obeys Thm A.3's η_q bound; `tests/test_state_quant.py`
+checks both the bound and end-to-end decode drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chimera_attention import ChimeraState
+
+
+@dataclasses.dataclass(frozen=True)
+class StateQuantConfig:
+    s_bits: int = 16  # accumulator S (higher precision — §4.12)
+    z_bits: int = 8  # normalization mass Z
+    buf_dtype: str = "bfloat16"  # ring buffers (exact local readout)
+
+
+@dataclasses.dataclass
+class QuantChimeraState:
+    """Fixed-point at-rest form of ChimeraState (a pytree)."""
+
+    S_q: jax.Array  # int16 (B, H, m, d_v)
+    S_scale: jax.Array  # f32 (B, H, 1, 1)
+    Z_q: jax.Array  # int8 (B, H, m)
+    Z_scale: jax.Array  # f32 (B, H, 1)
+    k_buf: jax.Array
+    v_buf: jax.Array
+    count: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    QuantChimeraState,
+    lambda s: ((s.S_q, s.S_scale, s.Z_q, s.Z_scale, s.k_buf, s.v_buf, s.count), None),
+    lambda _, c: QuantChimeraState(*c),
+)
+
+
+def _int_dtype(bits: int):
+    return {8: jnp.int8, 16: jnp.int16}[bits]
+
+
+def _quant(x: jax.Array, bits: int, axes: Tuple[int, ...]):
+    max_int = 2 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / max_int
+    q = jnp.clip(jnp.round(x / scale), -max_int - 1, max_int).astype(_int_dtype(bits))
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_state(state: ChimeraState, cfg: StateQuantConfig = StateQuantConfig()) -> QuantChimeraState:
+    S_q, S_scale = _quant(state.S.astype(jnp.float32), cfg.s_bits, (-2, -1))
+    Z_q, Z_scale = _quant(state.Z.astype(jnp.float32), cfg.z_bits, (-1,))
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.buf_dtype]
+    return QuantChimeraState(
+        S_q=S_q, S_scale=S_scale, Z_q=Z_q, Z_scale=Z_scale,
+        k_buf=state.k_buf.astype(dt), v_buf=state.v_buf.astype(dt),
+        count=state.count,
+    )
+
+
+def dequantize_state(qs: QuantChimeraState, dtype=jnp.float32) -> ChimeraState:
+    return ChimeraState(
+        S=(qs.S_q.astype(jnp.float32) * qs.S_scale).astype(dtype),
+        Z=(qs.Z_q.astype(jnp.float32) * qs.Z_scale).astype(dtype),
+        k_buf=qs.k_buf.astype(dtype),
+        v_buf=qs.v_buf.astype(dtype),
+        count=qs.count,
+    )
+
+
+def quant_decode_step(cfg_attn, params, q_t, k_t, v_t, qs: QuantChimeraState,
+                      qcfg: StateQuantConfig = StateQuantConfig()):
+    """Decode with fixed-point at-rest state: dequant → exact step → requant.
+
+    On TPU the dequant/update/requant chain fuses into the decode kernel's
+    VMEM pass; at rest the state cache streams at int16/int8 width.
+    """
+    from repro.core.chimera_attention import chimera_decode_step
+
+    state = dequantize_state(qs)
+    out, new_state = chimera_decode_step(cfg_attn, params, q_t, k_t, v_t, state)
+    return out, quantize_state(new_state, qcfg)
+
+
+def state_bytes(state) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(state))

@@ -1,0 +1,156 @@
+"""Symbolic execution path: ternary rules, HL-MRF weight learning, and
+compiled table encodings (paper §3.5, Eq. 16, and the TCAM/SRAM split).
+
+The dataplane realization has two tiers:
+
+* **Hard rules** — exact ternary (value, mask) signatures in TCAM.  A hit
+  produces 𝕀_sym = 1 and (when λ_h = 1) a deterministic veto in the cascade
+  fusion (Eq. 15).  We reproduce TCAM semantics bit-exactly over packed
+  uint32 words: hit ⇔ (sig & mask) == (value & mask) for every word.
+* **Soft rules** — hinge-loss MRF potentials (Eq. 16) whose weights W_q are
+  learned *offline* (control plane) and compiled into a compact fixed-point
+  SRAM table; at line rate the dataplane only gathers precompiled weights.
+
+The offline learner below reduces HL-MRF maximum-likelihood for binary
+outputs to a convex pseudo-likelihood problem: p(y=1|x) = σ(f_W(0,x) −
+f_W(1,x)) with W ≥ 0 (projected gradient), which is the standard tractable
+training reduction for hinge potentials.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import FixedPointSpec, dequantize, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSet:
+    """M ternary rules over W-word packed signatures (pytree of arrays)."""
+
+    values: jax.Array  # (M, W) uint32 — target bit patterns
+    masks: jax.Array  # (M, W) uint32 — 1 = care bit, 0 = don't care
+    weights: jax.Array  # (M,) fp32 — soft-symbolic weights (HL-MRF W_q)
+    hard: jax.Array  # (M,) bool — hard-veto rules (TCAM tier)
+
+    @property
+    def n_rules(self) -> int:
+        return self.values.shape[0]
+
+
+jax.tree_util.register_pytree_node(
+    RuleSet,
+    lambda r: ((r.values, r.masks, r.weights, r.hard), None),
+    lambda _, c: RuleSet(*c),
+)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """(..., n_bits in {0,1}) -> (..., ceil(n_bits/32)) packed uint32."""
+    n = bits.shape[-1]
+    pad = (-n) % 32
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1
+        )
+    words = bits.reshape(bits.shape[:-1] + ((n + pad) // 32, 32)).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def ternary_match(sig: jax.Array, rules: RuleSet) -> jax.Array:
+    """TCAM lookup: (..., W) signature vs (M, W) rules -> (..., M) bool hits."""
+    masked_sig = sig[..., None, :] & rules.masks  # (..., M, W)
+    masked_val = rules.values & rules.masks
+    return jnp.all(masked_sig == masked_val, axis=-1)
+
+
+def hard_hit(hits: jax.Array, rules: RuleSet) -> jax.Array:
+    """𝕀_sym: any hard rule fired.  (..., M) -> (...)."""
+    return jnp.any(hits & rules.hard, axis=-1)
+
+
+def soft_score(hits: jax.Array, rules: RuleSet) -> jax.Array:
+    """s_sym = Σ_q W_q · hit_q — the compiled-table gather at line rate."""
+    return jnp.sum(hits.astype(jnp.float32) * rules.weights, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Offline HL-MRF training (Eq. 16) — control-plane only
+# --------------------------------------------------------------------------
+
+def hinge_potentials(x: jax.Array, bodies_a: jax.Array, bodies_b: jax.Array, y: jax.Array) -> jax.Array:
+    """Φ_q(y, x) = max(0, clip(a_qᵀx + b_q, 0, 1) − y): distance to
+    satisfaction of "body_q(x) ⇒ y" under Łukasiewicz semantics."""
+    body = jnp.clip(x @ bodies_a.T + bodies_b, 0.0, 1.0)  # (N, M)
+    return jnp.maximum(0.0, body - y[:, None])
+
+
+def train_hlmrf_weights(
+    x: jax.Array,  # (N, F) continuous features in [0, 1]
+    y: jax.Array,  # (N,) binary labels
+    bodies_a: jax.Array,  # (M, F) rule body linear forms
+    bodies_b: jax.Array,  # (M,)
+    steps: int = 300,
+    lr: float = 0.5,
+    l2: float = 1e-3,
+) -> jax.Array:
+    """Learn W ≥ 0 by projected gradient on the pseudo-likelihood.
+
+    f_W(y, x) = Σ_q W_q Φ_q(y, x); p(y=1|x) = σ(f_W(0,x) − f_W(1,x)).
+    """
+    phi0 = hinge_potentials(x, bodies_a, bodies_b, jnp.zeros_like(y))  # (N, M)
+    phi1 = hinge_potentials(x, bodies_a, bodies_b, jnp.ones_like(y))
+    delta = phi0 - phi1  # (N, M): evidence for y=1
+
+    def loss(w):
+        logits = delta @ w
+        ll = y * jax.nn.log_sigmoid(logits) + (1 - y) * jax.nn.log_sigmoid(-logits)
+        return -jnp.mean(ll) + l2 * jnp.sum(w * w)
+
+    grad = jax.grad(loss)
+
+    def body(w, _):
+        w = w - lr * grad(w)
+        return jnp.maximum(w, 0.0), ()  # HL-MRF weights are nonnegative
+
+    w0 = jnp.ones((bodies_a.shape[0],)) * 0.1
+    w, _ = jax.lax.scan(body, w0, None, length=steps)
+    return w
+
+
+def compile_weights_to_table(
+    weights: jax.Array, spec: FixedPointSpec, budget_bits: int
+) -> Tuple[jax.Array, FixedPointSpec]:
+    """Compile learned W_q into the fixed-point SRAM table (Eq. 19 check)."""
+    n = int(weights.shape[0])
+    if n * spec.bits > budget_bits:
+        raise ValueError(
+            f"rule table needs {n * spec.bits} bits > budget {budget_bits} (Eq. 19)"
+        )
+    wmax = float(jnp.max(jnp.abs(weights)))
+    scale = max(wmax, 1e-9) / spec.max_int
+    qspec = FixedPointSpec(bits=spec.bits, scale=scale)
+    return quantize(weights, qspec), qspec
+
+
+def decompile_table(table: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    return dequantize(table, spec)
+
+
+def make_ruleset_from_signatures(
+    sigs: jax.Array,  # (M, W) uint32 signatures of known-bad patterns
+    care_bits: jax.Array,  # (M, W) uint32 masks
+    weights: jax.Array,
+    hard: jax.Array,
+) -> RuleSet:
+    return RuleSet(
+        values=sigs.astype(jnp.uint32),
+        masks=care_bits.astype(jnp.uint32),
+        weights=weights.astype(jnp.float32),
+        hard=hard.astype(bool),
+    )

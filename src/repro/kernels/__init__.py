@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the performance-critical Chimera compute paths.
+
+Each kernel package contains:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (with interpret-mode fallback on CPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the chunked Chimera attention kernel.
+
+Semantics (paper §3.3-3.4): token i attends
+  * exactly (exp kernel, scores exp(q̂ᵀk̂/√d)) to tokens in its own chunk
+    with j ≤ i  — the SRAM local layer;
+  * via φ-linearized scores φ(q)ᵀφ(k) to every token of earlier chunks —
+    the compressed stream (Eqs. 9-10).
+
+Returns the *unnormalized* (num, den) partials so the caller can merge the
+static-global term before the final division (a SumReduce, Eq. 3).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def chimera_attention_partials_ref(
+    q: jnp.ndarray,  # (B, Hkv, Gq, T, d) — normalized queries
+    k: jnp.ndarray,  # (B, Hkv, T, d) — normalized keys
+    v: jnp.ndarray,  # (B, Hkv, T, d_v)
+    phi_q: jnp.ndarray,  # (B, Hkv, Gq, T, m)
+    phi_k: jnp.ndarray,  # (B, Hkv, T, m)
+    chunk_size: int,
+    use_local: bool = True,
+    use_stream: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, Hkv, Gq, T, d = q.shape
+    d_v = v.shape[-1]
+    idx = jnp.arange(T)
+    same_chunk = (idx[:, None] // chunk_size) == (idx[None, :] // chunk_size)
+    causal = idx[:, None] >= idx[None, :]
+    num = jnp.zeros((B, Hkv, Gq, T, d_v), q.dtype)
+    den = jnp.zeros((B, Hkv, Gq, T), q.dtype)
+    if use_local:
+        mask = (same_chunk & causal).astype(q.dtype)
+        s = jnp.exp(jnp.einsum("bhgid,bhjd->bhgij", q, k) / math.sqrt(d)) * mask
+        num = num + jnp.einsum("bhgij,bhjd->bhgid", s, v)
+        den = den + jnp.sum(s, axis=-1)
+    if use_stream:
+        mask = ((~same_chunk) & causal).astype(q.dtype)
+        s = jnp.einsum("bhgim,bhjm->bhgij", phi_q, phi_k) * mask
+        num = num + jnp.einsum("bhgij,bhjd->bhgid", s, v)
+        den = den + jnp.sum(s, axis=-1)
+    return num, den

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused streaming decode step.
+
+Identical semantics to :func:`repro.core.chimera_attention.chimera_decode_step`
+minus the feature-map application and global term (those are applied by the
+caller): buffer write → exact local readout → stream readout → merge →
+fold-on-full.  This is the dataplane per-packet program (Alg. 1 lines 12-16)
+as one fused op.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def decode_step_ref(
+    q: jnp.ndarray,  # (BH, Gq, d) normalized query
+    k_t: jnp.ndarray,  # (BH, d) normalized key
+    v_t: jnp.ndarray,  # (BH, dv)
+    phi_q: jnp.ndarray,  # (BH, Gq, m)
+    phi_k_buf: jnp.ndarray,  # (BH, L, m) φ of buffered keys (incl. slot c after write)
+    k_buf: jnp.ndarray,  # (BH, L, d)  — state BEFORE this step
+    v_buf: jnp.ndarray,  # (BH, L, dv)
+    S: jnp.ndarray,  # (BH, m, dv)
+    Z: jnp.ndarray,  # (BH, m)
+    count: jnp.ndarray,  # () int32
+    chunk_size: int,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    BH, Gq, d = q.shape
+    L = chunk_size
+    c = count
+    k_buf = k_buf.at[:, c].set(k_t)
+    v_buf = v_buf.at[:, c].set(v_t)
+    valid = (jnp.arange(L) <= c).astype(q.dtype)
+    s_loc = jnp.exp(jnp.einsum("bgd,bjd->bgj", q, k_buf) / math.sqrt(d)) * valid
+    num = jnp.einsum("bgj,bjd->bgd", s_loc, v_buf)
+    den = jnp.sum(s_loc, axis=-1)
+    num = num + jnp.einsum("bgm,bmd->bgd", phi_q, S)
+    den = den + jnp.einsum("bgm,bm->bg", phi_q, Z)
+    out = num / (den[..., None] + 1e-6)
+    full = c + 1 >= L
+    S_fold = S + jnp.einsum("bjm,bjd->bmd", phi_k_buf, v_buf)
+    Z_fold = Z + jnp.sum(phi_k_buf, axis=1)
+    S = jnp.where(full, S_fold, S)
+    Z = jnp.where(full, Z_fold, Z)
+    k_buf = jnp.where(full, jnp.zeros_like(k_buf), k_buf)
+    v_buf = jnp.where(full, jnp.zeros_like(v_buf), v_buf)
+    new_count = jnp.where(full, 0, c + 1).astype(jnp.int32)
+    return out, (S, Z, k_buf, v_buf, new_count)

@@ -1,0 +1,34 @@
+"""Public wrapper for the sliding-window flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.window_attention.kernel import window_attention_pallas
+from repro.kernels.window_attention.ref import window_attention_ref
+
+
+def sliding_window_attention(
+    q: jax.Array,  # (B, H, T, d)
+    k: jax.Array,  # (B, H, T, d) — pre-expanded to H query heads
+    v: jax.Array,
+    window: int,
+    blk: int = 128,
+) -> jax.Array:
+    B, H, T, d = q.shape
+    interpret = jax.default_backend() != "tpu"
+    if T % blk != 0 or window % blk != 0:
+        # shape fallback: exact reference (still O(T·T); used for tiny tests)
+        return window_attention_ref(
+            q.reshape(B * H, T, d), k.reshape(B * H, T, d), v.reshape(B * H, T, v.shape[-1]), window
+        ).reshape(B, H, T, v.shape[-1])
+    out = window_attention_pallas(
+        q.reshape(B * H, T, d),
+        k.reshape(B * H, T, d),
+        v.reshape(B * H, T, v.shape[-1]),
+        window=window,
+        blk_q=blk,
+        blk_k=blk,
+        interpret=interpret,
+    )
+    return out.reshape(B, H, T, v.shape[-1])

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: causal sliding-window softmax attention (paper L_t layer
+standalone; also Mixtral's SWA).  O(T²) masked reference."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def window_attention_ref(
+    q: jnp.ndarray,  # (BH, T, d)
+    k: jnp.ndarray,  # (BH, T, d)
+    v: jnp.ndarray,  # (BH, T, dv)
+    window: int,
+) -> jnp.ndarray:
+    T, d = q.shape[-2], q.shape[-1]
+    scores = jnp.einsum("bid,bjd->bij", q, k) / math.sqrt(d)
+    idx = jnp.arange(T)
+    delta = idx[:, None] - idx[None, :]
+    band = (delta >= 0) & (delta < window)
+    scores = jnp.where(band[None], scores, -jnp.inf)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bij,bjd->bid", w, v)

@@ -1,0 +1,195 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init).  For each cell this driver:
+
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. assembles the jitted step (train_step / prefill_step / serve_step)
+     with parameter, optimizer, input and cache shardings from the logical
+     rules engine,
+  3. ``.lower().compile()`` — any sharding mismatch, OOM-at-compile or
+     unsupported collective is a bug in the framework and fails the cell,
+  4. records ``memory_analysis()``, ``cost_analysis()`` and the parsed
+     collective schedule / roofline inputs into artifacts/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch codeqwen1.5-7b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all --multi-pod
+"""
+
+import argparse  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    outdir: str,
+    rules_mode: str = "",
+    seq_sharded: bool = False,
+    act_sp: bool = True,
+    microbatches: int = 0,
+    save_hlo: bool = True,
+    use_chimera: bool = True,
+) -> dict:
+    import dataclasses
+
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.runtime import hlo_analysis
+
+    cfg = get_config(arch)
+    if not use_chimera:
+        cfg = dataclasses.replace(cfg, use_chimera=False)
+    shape = SHAPES[shape_name]
+    if not rules_mode:
+        # ≥100B params: fold the pod axis into parameter sharding
+        rules_mode = "fsdp_pod" if (multi_pod and cfg.param_count() > 1e11) else "fsdp"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, rules_mode=rules_mode, seq_sharded=seq_sharded, act_sp=act_sp, microbatches=microbatches)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    costs = hlo_analysis.analyze(text, fallback_trips=cell.trip_counts)
+
+    n_dev = mesh.devices.size
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "rules_mode": rules_mode,
+        "seq_sharded": seq_sharded,
+        "act_sp": act_sp,
+        "microbatches": microbatches,
+        "use_chimera": use_chimera,
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+            "total_per_device_bytes": (
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            ),
+        },
+        "xla_cost_analysis": {
+            "flops_body_once": cost.get("flops", 0.0),
+            "bytes_accessed_body_once": cost.get("bytes accessed", 0.0),
+        },
+        "hlo_costs": {
+            "flops_per_device": costs.flops,
+            "hbm_bytes_per_device": costs.hbm_bytes,
+            "hbm_write_bytes_per_device": costs.hbm_write_bytes,
+            "collective_wire_bytes_per_device": costs.collective_wire_bytes,
+            "collective_operand_bytes": costs.collective_operand_bytes,
+            "collective_count": costs.collective_count,
+            "collectives": costs.collectives,
+            "by_scope_flops": costs.by_scope_flops,
+            "notes": costs.notes[:20],
+        },
+        "trip_counts": cell.trip_counts,
+    }
+    os.makedirs(outdir, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{record['mesh']}" + ("_sp" if seq_sharded else "") + (
+        "" if use_chimera else "_softmax"
+    ) + ("" if act_sp else "_noactsp") + (f"_{rules_mode}" if rules_mode != "fsdp" else "") + (
+        f"_mb{microbatches}" if microbatches else "")
+    with open(os.path.join(outdir, tag + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+    if save_hlo:
+        with gzip.open(os.path.join(outdir, tag + ".hlo.gz"), "wt") as f:
+            f.write(text)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default="", help="base|fsdp|fsdp_pod (default: auto)")
+    ap.add_argument("--seq-sharded", action="store_true")
+    ap.add_argument("--no-act-sp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--no-chimera", action="store_true")
+    ap.add_argument("--outdir", default="artifacts/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, SHAPES
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    if args.arch == "all":
+        archs = [a for a in archs if a != "chimera-dataplane"]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            from repro.configs import get_config
+
+            cfg = get_config(arch)
+            if shape_name.startswith("decode") or shape_name.startswith("long"):
+                if cfg.encoder_layers == 0 and cfg.family == "audio":
+                    continue  # encoder-only: no decode step (none assigned)
+            for mp in meshes:
+                tag = f"{arch} × {shape_name} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(
+                        arch,
+                        shape_name,
+                        mp,
+                        args.outdir,
+                        rules_mode=args.rules,
+                        seq_sharded=args.seq_sharded,
+                        act_sp=not args.no_act_sp,
+                        microbatches=args.microbatches,
+                        save_hlo=not args.no_hlo,
+                        use_chimera=not args.no_chimera,
+                    )
+                    print(
+                        f"[ok] {tag}: {rec['memory']['total_per_device_bytes']/2**30:.2f} GiB/dev, "
+                        f"{rec['hlo_costs']['flops_per_device']:.3e} flops/dev, "
+                        f"compile {rec['compile_s']:.1f}s",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILED cells:\n" + "\n".join(failures), flush=True)
+        raise SystemExit(1)
+    print("\nall cells compiled.", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set XLA_FLAGS
+before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) data×model single pod; (2, 16, 16) pod×data×model for two
+    pods (512 chips).  The `pod` axis composes with `data` for the batch
+    dimension and optionally joins parameter sharding (fsdp_pod rules)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    if multi_pod:
+        return jax.make_mesh(
+            (2, n_data, n_model),
+            ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (n_data, n_model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,52 @@
+"""Serving driver: batched requests against a (small) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch chimera-dataplane \
+        --requests 8 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chimera-dataplane")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import model as M
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, batch_slots=args.slots, max_len=512)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=(args.prompt_len,)).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new))
+    t0 = time.perf_counter()
+    ticks = 0
+    while engine.pending or any(r is not None for r in engine.active):
+        engine.step()
+        ticks += 1
+    dt = time.perf_counter() - t0
+    total_tokens = args.requests * (args.prompt_len + args.max_new)
+    print(
+        f"served {args.requests} requests, {total_tokens} tokens in {dt:.2f}s "
+        f"({total_tokens/dt:.0f} tok/s, {ticks} engine ticks, "
+        f"{args.slots} slots)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch chimera-dataplane \
+        --steps 100 --batch 8 --seq 128
+
+Single-host execution with the full production stack: sharded data,
+checkpoint/restart, two-timescale hooks.  On a real cluster this module is
+the per-host entrypoint (jax.distributed.initialize + the same code).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chimera-dataplane")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", help="use reduced config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, smoke_config
+    from repro.data.pipeline import TokenStream
+    from repro.optim.optimizer import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    stream = TokenStream(
+        vocab_size=cfg.vocab_size,
+        batch_size=args.batch,
+        seq_len=args.seq + 1,
+    )
+    trainer = Trainer(
+        cfg,
+        TrainerConfig(
+            total_steps=args.steps,
+            ckpt_dir=args.ckpt_dir,
+            log_every=max(1, args.steps // 20),
+            ckpt_every=max(10, args.steps // 4),
+        ),
+        stream,
+        opt_cfg=AdamWConfig(lr=args.lr, total_steps=args.steps),
+    )
+    out = trainer.run()
+    for row in out["log"]:
+        print(
+            f"step {row['step']:5d} loss {row.get('loss', float('nan')):.4f} "
+            f"({row['step_seconds']*1e3:.0f} ms/step)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,509 @@
+"""Attention layers: softmax GQA / SWA / MLA, and the Chimera transform.
+
+Every architecture's attention goes through :func:`attention_layer`.  When
+``cfg.use_chimera`` is set, the per-head (q, k, v) are routed through the
+paper's primitive (:mod:`repro.core.chimera_attention`) instead of softmax —
+the technique is an attention-layer transform and composes with GQA grouping,
+qk-norm, RoPE, SWA (subsumed by the local layer) and MLA (applied after
+latent up-projection).
+
+Softmax paths are written blockwise (lax.scan over kv/q blocks with online
+logsumexp) so prefill_32k fits memory; the scan scopes are named
+("softmax_blk", "swa_blk") so the roofline analyzer can attribute trip
+counts (see benchmarks/roofline.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import chimera_attention as chimera
+from repro.models.layers import apply_norm, apply_rope, dense, init_dense, init_norm
+
+Params = dict
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# Blockwise softmax attention (memory-efficient reference path)
+# ==========================================================================
+
+def _grouped(q: jax.Array, n_kv: int) -> jax.Array:
+    B, H, T, d = q.shape
+    return q.reshape(B, n_kv, H // n_kv, T, d)
+
+
+def blockwise_softmax_attention(
+    q: jax.Array,  # (B, H, T, dh)
+    k: jax.Array,  # (B, Hkv, Tk, dh)
+    v: jax.Array,  # (B, Hkv, Tk, dv)
+    blk: int = 1024,
+    causal: bool = True,
+) -> jax.Array:
+    B, H, T, dh = q.shape
+    n_kv = k.shape[1]
+    Tk = k.shape[2]
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    if Tk % blk != 0 or Tk <= blk:
+        return _masked_softmax_attention(q, k, v, causal)
+    qg = _grouped(q, n_kv)
+    n_blocks = Tk // blk
+    kb = jnp.moveaxis(k.reshape(B, n_kv, n_blocks, blk, dh), 2, 0)
+    vb = jnp.moveaxis(v.reshape(B, n_kv, n_blocks, blk, dv), 2, 0)
+    rows = jnp.arange(T)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        j, k_j, v_j = xs
+        with jax.named_scope("softmax_blk"):
+            s = jnp.einsum("bhgid,bhjd->bhgij", qg, k_j) * scale
+            if causal:
+                cols = j * blk + jnp.arange(blk)
+                mask = rows[:, None] >= cols[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            p = jnp.exp(s - m_cur[..., None])
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhgij,bhjd->bhgid", p, v_j)
+            return (m_cur, l_cur, acc), ()
+
+    init = (
+        jnp.full((B, n_kv, H // n_kv, T), NEG_INF, q.dtype),
+        jnp.zeros((B, n_kv, H // n_kv, T), q.dtype),
+        jnp.zeros((B, n_kv, H // n_kv, T, dv), q.dtype),
+    )
+    body = jax.checkpoint(body, prevent_cse=False)  # nested remat
+    (m, l, acc), _ = jax.lax.scan(body, init, (jnp.arange(n_blocks), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, T, dv)
+
+
+def _masked_softmax_attention(q, k, v, causal: bool, window: int = 0) -> jax.Array:
+    B, H, T, dh = q.shape
+    n_kv = k.shape[1]
+    qg = _grouped(q, n_kv)
+    s = jnp.einsum("bhgid,bhjd->bhgij", qg, k) / math.sqrt(dh)
+    Tk = k.shape[2]
+    ii = jnp.arange(T)[:, None] + (Tk - T)  # align ends (prefill offsets)
+    jj = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((T, Tk), bool)
+    if causal:
+        mask &= ii >= jj
+    if window:
+        mask &= ii - jj < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgij,bhjd->bhgid", w, v)
+    return out.reshape(B, H, T, v.shape[-1])
+
+
+def banded_softmax_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int, blk: int = 1024
+) -> jax.Array:
+    """Causal SWA in O(T·window): scan over q blocks, sliced kv band."""
+    B, H, T, dh = q.shape
+    n_kv = k.shape[1]
+    dv = v.shape[-1]
+    width = window + blk
+    if T % blk != 0 or T < width:
+        return _masked_softmax_attention(q, k, v, causal=True, window=window)
+    qg = _grouped(q, n_kv)
+    n_blocks = T // blk
+    qb = jnp.moveaxis(qg.reshape(B, n_kv, H // n_kv, n_blocks, blk, dh), 3, 0)
+    scale = 1.0 / math.sqrt(dh)
+
+    def body(_, xs):
+        i, q_i = xs
+        with jax.named_scope("swa_blk"):
+            s0 = i * blk
+            start = jnp.clip(s0 + blk - width, 0, T - width)
+            k_w = jax.lax.dynamic_slice_in_dim(k, start, width, axis=2)
+            v_w = jax.lax.dynamic_slice_in_dim(v, start, width, axis=2)
+            rows = s0 + jnp.arange(blk)
+            cols = start + jnp.arange(width)
+            delta = rows[:, None] - cols[None, :]
+            mask = (delta >= 0) & (delta < window)
+            s = jnp.einsum("bhgid,bhjd->bhgij", q_i, k_w) * scale
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            w = jax.nn.softmax(s, axis=-1)
+            return (), jnp.einsum("bhgij,bhjd->bhgid", w, v_w)
+
+    body = jax.checkpoint(body, prevent_cse=False)  # nested remat
+    _, outs = jax.lax.scan(body, (), (jnp.arange(n_blocks), qb))
+    out = jnp.moveaxis(outs, 0, 3)  # (B,nkv,G,n,blk,dv)
+    return out.reshape(B, n_kv, H // n_kv, T, dv).reshape(B, H, T, dv)
+
+
+# ==========================================================================
+# GQA / SWA attention layer (with optional Chimera transform)
+# ==========================================================================
+
+def init_attention(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, dict]:
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["wq"], a["wq"] = init_dense(ks[0], d, H * dh, ("embed", "heads"), bias=cfg.qkv_bias)
+    p["wk"], a["wk"] = init_dense(ks[1], d, Hkv * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias)
+    p["wv"], a["wv"] = init_dense(ks[2], d, Hkv * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias)
+    p["wo"], a["wo"] = init_dense(ks[3], H * dh, d, ("heads", "embed"))
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = init_norm(dh, "rmsnorm")
+        p["k_norm"], a["k_norm"] = init_norm(dh, "rmsnorm")
+        a["q_norm"] = {"scale": ("head_dim",)}
+        a["k_norm"] = {"scale": ("head_dim",)}
+    if cfg.use_chimera:
+        p["chimera"] = chimera.init_chimera_attention(cfg.chimera, Hkv, dh, dh, ks[4])
+        a["chimera"] = _chimera_axes(p["chimera"])
+    return p, a
+
+
+def _chimera_axes(params: Params) -> dict:
+    ax = {"fm": jax.tree_util.tree_map(lambda x: (None,) * x.ndim, params["fm"])}
+    if "sig_proj" in params:
+        ax["sig_proj"] = (None, None)
+        ax["k_global"] = ("kv_heads", None, "head_dim")
+        ax["v_global"] = ("kv_heads", None, "head_dim")
+    return ax
+
+
+def _project_qkv(cfg: ArchConfig, params: Params, x: jax.Array, positions: jax.Array):
+    B, T, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(params["wq"], x).reshape(B, T, H, dh).transpose(0, 2, 1, 3)
+    k = dense(params["wk"], x).reshape(B, T, Hkv, dh).transpose(0, 2, 1, 3)
+    v = dense(params["wv"], x).reshape(B, T, Hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = apply_norm(params["q_norm"], q, "rmsnorm")
+        k = apply_norm(params["k_norm"], k, "rmsnorm")
+    q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def attention_layer(
+    cfg: ArchConfig,
+    params: Params,
+    x: jax.Array,  # (B, T, d)
+    positions: jax.Array,  # (B, T)
+    causal: bool = True,
+) -> jax.Array:
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    if cfg.use_chimera and causal:
+        with jax.named_scope("chimera"):
+            o = chimera.chimera_attention(cfg.chimera, params["chimera"], q, k, v)
+    elif cfg.attention_kind == "swa" and cfg.sliding_window and causal:
+        o = banded_softmax_attention(q, k, v, cfg.sliding_window, cfg.softmax_blk)
+    else:
+        o = blockwise_softmax_attention(q, k, v, cfg.softmax_blk, causal=causal)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.n_heads * cfg.head_dim)
+    return dense(params["wo"], o)
+
+
+# --------------------------------------------------------------------------
+# Decode caches
+# --------------------------------------------------------------------------
+
+def init_attention_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+):
+    """Chimera mode: bounded state.  Softmax mode: full KV cache (SWA: ring)."""
+    Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.use_chimera:
+        n_state = cfg.n_heads if cfg.chimera.expand_kv else Hkv
+        return chimera.init_decode_state(cfg.chimera, batch, n_state, dh, dh, dtype)
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, Hkv, length, dh), dtype),
+        "v": jnp.zeros((batch, Hkv, length, dh), dtype),
+    }
+
+
+def attention_decode(
+    cfg: ArchConfig,
+    params: Params,
+    x_t: jax.Array,  # (B, 1, d)
+    position: jax.Array,  # (B,) current position
+    cache,
+):
+    B = x_t.shape[0]
+    q, k, v = _project_qkv(cfg, params, x_t, position[:, None])
+    q_t, k_t, v_t = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    if cfg.use_chimera:
+        o, cache = chimera.chimera_decode_step(
+            cfg.chimera, params["chimera"], q_t, k_t, v_t, cache
+        )
+    else:
+        length = cache["k"].shape[2]
+        slot = (position[0] % length) if cfg.sliding_window else position[0]
+        ck = jax.lax.dynamic_update_index_in_dim(cache["k"], k_t, slot, axis=2)
+        cv = jax.lax.dynamic_update_index_in_dim(cache["v"], v_t, slot, axis=2)
+        cache = {"k": ck, "v": cv}
+        idx = jnp.arange(length)
+        if cfg.sliding_window:
+            valid = (idx <= slot) | (position[0] >= length)
+            kpos = jnp.where(idx <= slot, position[0] - (slot - idx), position[0] + (length - slot) + idx - length)
+            valid &= position[0] - kpos < cfg.sliding_window
+        else:
+            valid = idx <= position[0]
+        qg = q_t.reshape(B, cfg.n_kv_heads, -1, cfg.head_dim)
+        s = jnp.einsum("bhgd,bhjd->bhgj", qg, ck) / math.sqrt(cfg.head_dim)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgj,bhjd->bhgd", w, cv).reshape(B, cfg.n_heads, cfg.head_dim)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return dense(params["wo"], o), cache
+
+
+# ==========================================================================
+# Multi-head Latent Attention (MiniCPM3 / DeepSeek family)
+# ==========================================================================
+
+def init_mla(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, dict]:
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    dv = cfg.v_head_dim or cfg.head_dim
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    if qr:
+        p["q_down"], a["q_down"] = init_dense(ks[0], d, qr, ("embed", None))
+        p["q_norm"], a["q_norm"] = init_norm(qr, "rmsnorm")
+        a["q_norm"] = {"scale": (None,)}
+        p["q_up"], a["q_up"] = init_dense(ks[1], qr, H * (dn + dr), (None, "heads"))
+    else:
+        p["q_up"], a["q_up"] = init_dense(ks[1], d, H * (dn + dr), ("embed", "heads"))
+    p["kv_down"], a["kv_down"] = init_dense(ks[2], d, r + dr, ("embed", None))
+    p["kv_norm"], a["kv_norm"] = init_norm(r, "rmsnorm")
+    a["kv_norm"] = {"scale": (None,)}
+    p["k_up"], a["k_up"] = init_dense(ks[3], r, H * dn, (None, "heads"))
+    p["v_up"], a["v_up"] = init_dense(ks[4], r, H * dv, (None, "heads"))
+    p["wo"], a["wo"] = init_dense(ks[5], H * dv, d, ("heads", "embed"))
+    if cfg.use_chimera:
+        p["chimera"] = chimera.init_chimera_attention(
+            cfg.chimera, H, dn + dr, dv, ks[6]
+        )
+        a["chimera"] = _chimera_axes(p["chimera"])
+    return p, a
+
+
+def _mla_qkv(cfg: ArchConfig, params: Params, x: jax.Array, positions: jax.Array):
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    dv = cfg.v_head_dim or cfg.head_dim
+    if cfg.q_lora_rank:
+        ql = apply_norm(params["q_norm"], dense(params["q_down"], x), "rmsnorm")
+    else:
+        ql = x
+    q = dense(params["q_up"], ql).reshape(B, T, H, dn + dr).transpose(0, 2, 1, 3)
+    q_n, q_r = q[..., :dn], q[..., dn:]
+    q_r = apply_rope(q_r, positions[:, None, :], cfg.rope_theta)
+    kv = dense(params["kv_down"], x)
+    c_kv = apply_norm(params["kv_norm"], kv[..., : cfg.kv_lora_rank], "rmsnorm")
+    k_r = kv[..., cfg.kv_lora_rank:][:, None]  # (B, 1, T, dr) shared head
+    k_r = apply_rope(k_r, positions[:, None, :], cfg.rope_theta)
+    k_n = dense(params["k_up"], c_kv).reshape(B, T, H, dn).transpose(0, 2, 1, 3)
+    v = dense(params["v_up"], c_kv).reshape(B, T, H, dv).transpose(0, 2, 1, 3)
+    q_full = jnp.concatenate([q_n, q_r], axis=-1)
+    k_full = jnp.concatenate([k_n, jnp.broadcast_to(k_r, k_n[..., :dr].shape)], axis=-1)
+    return q_full, k_full, v, c_kv, k_r
+
+
+def mla_attention_layer(
+    cfg: ArchConfig, params: Params, x: jax.Array, positions: jax.Array
+) -> jax.Array:
+    B, T, _ = x.shape
+    q, k, v, _, _ = _mla_qkv(cfg, params, x, positions)
+    if cfg.use_chimera:
+        with jax.named_scope("chimera"):
+            o = chimera.chimera_attention(cfg.chimera, params["chimera"], q, k, v)
+    else:
+        o = blockwise_softmax_attention(q, k, v, cfg.softmax_blk, causal=True)
+    dv = cfg.v_head_dim or cfg.head_dim
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.n_heads * dv)
+    return dense(params["wo"], o)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.use_chimera:
+        dv = cfg.v_head_dim or cfg.head_dim
+        return chimera.init_decode_state(
+            cfg.chimera, batch, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim, dv, dtype
+        )
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_r": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(
+    cfg: ArchConfig, params: Params, x_t: jax.Array, position: jax.Array, cache
+):
+    """MLA decode.  Chimera mode: bounded state on materialized heads.
+    Softmax mode: latent cache with the absorbed-matmul trick (scores and
+    values computed in the rank-r latent space — MLA's memory saving)."""
+    B = x_t.shape[0]
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    dv = cfg.v_head_dim or cfg.head_dim
+    q, k, v, c_kv, k_r = _mla_qkv(cfg, params, x_t, position[:, None])
+    if cfg.use_chimera:
+        o, cache = chimera.chimera_decode_step(
+            cfg.chimera, params["chimera"], q[:, :, 0], k[:, :, 0], v[:, :, 0], cache
+        )
+        o = o.reshape(B, 1, H * dv)
+        return dense(params["wo"], o), cache
+    pos = position[0]
+    cc = jax.lax.dynamic_update_index_in_dim(cache["c_kv"], c_kv[:, 0], pos, axis=1)
+    cr = jax.lax.dynamic_update_index_in_dim(cache["k_r"], k_r[:, 0, 0], pos, axis=1)
+    cache = {"c_kv": cc, "k_r": cr}
+    # absorbed scores: q_n W_kup ∈ latent space, dot with cached c_kv
+    w_kup = params["k_up"]["w"].reshape(cfg.kv_lora_rank, H, dn)
+    q_n = q[:, :, 0, :dn]  # (B, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_n, w_kup)
+    s = jnp.einsum("bhr,btr->bht", q_lat, cc)
+    s = s + jnp.einsum("bhd,btd->bht", q[:, :, 0, dn:], cr)
+    s = s / math.sqrt(dn + dr)
+    valid = jnp.arange(cc.shape[1]) <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bht,btr->bhr", w, cc)  # latent-space values
+    w_vup = params["v_up"]["w"].reshape(cfg.kv_lora_rank, H, dv)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_vup).reshape(B, 1, H * dv)
+    return dense(params["wo"], o), cache
+
+
+# ==========================================================================
+# Cross-attention (enc-dec): encoder keys are the static global set
+# ==========================================================================
+
+def init_cross_attention(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, dict]:
+    d, H, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["wq"], a["wq"] = init_dense(ks[0], d, H * dh, ("embed", "heads"))
+    p["wk"], a["wk"] = init_dense(ks[1], d, H * dh, ("embed", "heads"))
+    p["wv"], a["wv"] = init_dense(ks[2], d, H * dh, ("embed", "heads"))
+    p["wo"], a["wo"] = init_dense(ks[3], H * dh, d, ("heads", "embed"))
+    if cfg.use_chimera:
+        p["fm"] = chimera.init_chimera_attention(
+            cfg.chimera, H, dh, dh, ks[4]
+        )["fm"]
+        a["fm"] = jax.tree_util.tree_map(lambda x: (None,) * x.ndim, p["fm"])
+    return p, a
+
+
+def cross_attention_layer(
+    cfg: ArchConfig,
+    params: Params,
+    x: jax.Array,  # (B, Tq, d) decoder states
+    enc_kv: Tuple[jax.Array, jax.Array],  # precomputed (k, v): (B, H, Te, dh)
+) -> jax.Array:
+    B, Tq, _ = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    q = dense(params["wq"], x).reshape(B, Tq, H, dh).transpose(0, 2, 1, 3)
+    k, v = enc_kv
+    if cfg.use_chimera:
+        # linearized cross-attention: the encoder keys are a static set per
+        # request — exactly the paper's TCAM-resident G (Eq. 14 right term)
+        from repro.core.feature_maps import _normalize, apply_feature_map
+
+        fmc = cfg.chimera.feature_map
+        qh = _normalize(q, fmc.input_scale)
+        kh = _normalize(k, fmc.input_scale)
+        pq = apply_feature_map(fmc, params["fm"], qh)
+        pk = apply_feature_map(fmc, params["fm"], kh)
+        s = jnp.einsum("bhim,bhjm->bhij", pq, pk)
+        num = jnp.einsum("bhij,bhjd->bhid", s, v)
+        den = jnp.sum(s, axis=-1)
+        o = num / (den[..., None] + cfg.chimera.gamma)
+    else:
+        o = blockwise_softmax_attention(q, k, v, cfg.softmax_blk, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(B, Tq, H * dh)
+    return dense(params["wo"], o)
+
+
+def encode_cross_kv(cfg: ArchConfig, params: Params, enc_out: jax.Array):
+    B, Te, _ = enc_out.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    k = dense(params["wk"], enc_out).reshape(B, Te, H, dh).transpose(0, 2, 1, 3)
+    v = dense(params["wv"], enc_out).reshape(B, Te, H, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+# ==========================================================================
+# Chunked fast prefill: full-sequence forward that also emits decode caches
+# ==========================================================================
+
+def attention_prefill(
+    cfg: ArchConfig,
+    params: Params,
+    x: jax.Array,  # (B, T, d)
+    positions: jax.Array,  # (B, T)
+    max_len: int,
+):
+    """Forward over the whole prompt + the decode cache to continue from.
+
+    O(T) through the chunked Chimera path (vs O(T) sequential decode steps
+    with per-step dispatch) — the production prefill."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    if cfg.use_chimera:
+        with jax.named_scope("chimera"):
+            o, cache = chimera.chimera_prefill(cfg.chimera, params["chimera"], q, k, v)
+    elif cfg.attention_kind == "swa" and cfg.sliding_window:
+        o = banded_softmax_attention(q, k, v, cfg.sliding_window, cfg.softmax_blk)
+        cache = _fill_kv_cache(cfg, k, v, max_len)
+    else:
+        o = blockwise_softmax_attention(q, k, v, cfg.softmax_blk, causal=True)
+        cache = _fill_kv_cache(cfg, k, v, max_len)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.n_heads * cfg.head_dim)
+    return dense(params["wo"], o), cache
+
+
+def _fill_kv_cache(cfg: ArchConfig, k: jax.Array, v: jax.Array, max_len: int):
+    B, Hkv, T, dh = k.shape
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    ck = jnp.zeros((B, Hkv, length, dh), k.dtype)
+    cv = jnp.zeros((B, Hkv, length, dh), v.dtype)
+    if cfg.sliding_window and T > length:
+        # ring semantics: keep the last `length` tokens at their mod-slots
+        tail_k, tail_v = k[:, :, -length:], v[:, :, -length:]
+        slots = (jnp.arange(T - length, T)) % length
+        ck = ck.at[:, :, slots].set(tail_k)
+        cv = cv.at[:, :, slots].set(tail_v)
+    else:
+        keep = min(T, length)
+        ck = ck.at[:, :, :keep].set(k[:, :, :keep])
+        cv = cv.at[:, :, :keep].set(v[:, :, :keep])
+    return {"k": ck, "v": cv}
+
+
+def mla_prefill(
+    cfg: ArchConfig, params: Params, x: jax.Array, positions: jax.Array, max_len: int
+):
+    B, T, _ = x.shape
+    q, k, v, c_kv, k_r = _mla_qkv(cfg, params, x, positions)
+    if cfg.use_chimera:
+        with jax.named_scope("chimera"):
+            o, cache = chimera.chimera_prefill(cfg.chimera, params["chimera"], q, k, v)
+    else:
+        o = blockwise_softmax_attention(q, k, v, cfg.softmax_blk, causal=True)
+        cc = jnp.zeros((B, max_len, cfg.kv_lora_rank), c_kv.dtype)
+        cr = jnp.zeros((B, max_len, cfg.qk_rope_dim), c_kv.dtype)
+        keep = min(T, max_len)
+        cc = cc.at[:, :keep].set(c_kv[:, :keep])
+        cr = cr.at[:, :keep].set(k_r[:, 0, :keep])
+        cache = {"c_kv": cc, "k_r": cr}
+    dv = cfg.v_head_dim or cfg.head_dim
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.n_heads * dv)
+    return dense(params["wo"], o), cache

@@ -1,0 +1,147 @@
+"""Shared neural-net layers.
+
+Parameter convention: every ``init_*`` returns ``(params, axes)`` — two
+pytrees of identical structure, where ``axes`` leaves are tuples of logical
+dimension names (or None) consumed by :mod:`repro.runtime.sharding`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Axes = dict
+
+
+# --------------------------------------------------------------------------
+# Linear / norms / embeddings
+# --------------------------------------------------------------------------
+
+def init_dense(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    axes: Tuple[Optional[str], Optional[str]],
+    bias: bool = False,
+    scale: Optional[float] = None,
+) -> Tuple[Params, Axes]:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out)) * scale}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,))
+        a["b"] = (axes[1],)
+    return p, a
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def init_norm(d: int, kind: str = "rmsnorm") -> Tuple[Params, Axes]:
+    p = {"scale": jnp.ones((d,))}
+    a = {"scale": ("embed",)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,))
+        a["bias"] = ("embed",)
+    return p, a
+
+
+def apply_norm(params: Params, x: jax.Array, kind: str = "rmsnorm", eps: float = 1e-6) -> jax.Array:
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return y * params["scale"].astype(x.dtype)
+    mean = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.var(x.astype(jnp.float32), axis=-1, keepdims=True)
+    y = ((x - mean) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return y * params["scale"].astype(x.dtype) + params["bias"].astype(x.dtype)
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int) -> Tuple[Params, Axes]:
+    p = {"table": jax.random.normal(key, (vocab, d)) * 0.02}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    table = params["table"]
+    if table.shape[0] >= 32768:
+        # one-hot matmul: under GSPMD the gather's backward would otherwise
+        # materialize a full-vocab scatter per device; the one-hot dot keeps
+        # both fwd and bwd sharded over (vocab -> model, embed -> data).
+        # Pinning the table also pins its gradient cotangent (reduce-scatter
+        # instead of a full-vocab f32 all-reduce).
+        from repro.core.annotate import constrain
+
+        table = constrain(table, ("vocab", "embed"))
+        table = constrain(table, ("vocab", None))  # ZeRO gather over data only
+        oh = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+        # NOTE: not ("batch","act_seq","vocab") — act_seq and vocab both map
+        # to the model axis and the duplicate-drop would unshard vocab,
+        # forcing a full-vocab gather of the table
+        oh = constrain(oh, ("batch", None, "vocab"))
+        return oh @ table
+    return jnp.take(table, tokens, axis=0)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d: int, d_ff: int) -> Tuple[Params, Axes]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    pw, aw = init_dense(k1, d, d_ff, ("embed", "mlp"))
+    pv, av = init_dense(k2, d, d_ff, ("embed", "mlp"))
+    po, ao = init_dense(k3, d_ff, d, ("mlp", "embed"))
+    return {"wi": pw, "wg": pv, "wo": po}, {"wi": aw, "wg": av, "wo": ao}
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(dense(params["wg"], x)) * dense(params["wi"], x)
+    return dense(params["wo"], h)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (..., T, d) with d even; positions: broadcastable to (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Stacking helpers for scanned layer groups
+# --------------------------------------------------------------------------
+
+def stack_params(trees: list) -> Params:
+    """Stack identical pytrees along a new leading 'layers' axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_axes(axes_tree: Axes) -> Axes:
+    """Prepend the (unsharded) 'layers' logical axis to every leaf."""
+    return jax.tree_util.tree_map(
+        lambda a: ("layers",) + tuple(a),
+        axes_tree,
+        is_leaf=lambda a: isinstance(a, tuple),
+    )

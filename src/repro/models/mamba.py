@@ -1,0 +1,189 @@
+"""Mamba (S6) selective-state-space block (Jamba's attention-free layer).
+
+Chunked selective scan: outer ``lax.scan`` over time chunks (named scope
+"mamba" for roofline trip attribution) carrying h ∈ (B, d_inner, d_state);
+inner ``associative_scan`` within each chunk.  The inner dim d_inner carries
+the "mlp" logical axis so the state tensors shard over the model axis.
+
+The paper's technique is attention-scoped and therefore inapplicable here
+(recorded in DESIGN.md §5); Mamba is itself a bounded-state streaming layer,
+so Jamba's decode state remains O(1) in context length alongside Chimera's.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import init_dense, dense
+
+Params = dict
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return cfg.mamba_dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, dict]:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["in_proj"], a["in_proj"] = init_dense(ks[0], d, 2 * di, ("embed", "mlp"))
+    p["conv_w"] = jax.random.normal(ks[1], (cfg.mamba_d_conv, di)) * 0.2
+    a["conv_w"] = (None, "mlp")
+    p["conv_b"] = jnp.zeros((di,))
+    a["conv_b"] = ("mlp",)
+    p["x_proj"], a["x_proj"] = init_dense(ks[2], di, dtr + 2 * n, ("mlp", None))
+    p["dt_proj"], a["dt_proj"] = init_dense(ks[3], dtr, di, (None, "mlp"), bias=True)
+    # S4D-real initialization of A
+    p["A_log"] = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)))
+    a["A_log"] = ("mlp", None)
+    p["D"] = jnp.ones((di,))
+    a["D"] = ("mlp",)
+    p["out_proj"], a["out_proj"] = init_dense(ks[4], di, d, ("mlp", "embed"))
+    return p, a
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, carry=None):
+    """Depthwise causal conv (k taps as shifted adds).  x: (B, T, di)."""
+    k = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros_like(x[:, : k - 1])
+    else:
+        pad = carry  # (B, k-1, di) — last inputs of the previous segment
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_carry = xp[:, -(k - 1) :] if k > 1 else None
+    return out + b, new_carry
+
+
+def _ssm_chunk(h0, dA, dBx, C):
+    """Inner scan: h_t = dA_t ⊙ h_{t-1} + dBx_t; y_t = Σ_n C_t·h_t.
+
+    dA, dBx: (B, c, di, n); C: (B, c, n); h0: (B, di, n).
+    """
+
+    def combine(a, b):
+        (A1, X1), (A2, X2) = a, b
+        return (A1 * A2, X1 * A2 + X2)
+
+    A_acc, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = h + A_acc * h0[:, None]
+    y = jnp.einsum("bcdn,bcn->bcd", h, C)
+    return y, h[:, -1]
+
+
+def mamba_layer(
+    cfg: ArchConfig, params: Params, x: jax.Array, return_cache: bool = False,
+    init_cache=None,
+):
+    """x: (B, T, d) -> (B, T, d).  Causal; full-sequence (train/prefill).
+    With ``return_cache`` also returns the decode cache (final SSM state h +
+    causal-conv tail); ``init_cache`` continues from a previous segment so
+    ragged prompts split into full-chunk + tail segments exactly."""
+    B, T, d = x.shape
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dtr = _dt_rank(cfg)
+    c = min(cfg.mamba_chunk, T)
+    if T % c != 0:
+        # ragged prompt: full chunks then a tail segment with carried state
+        n_full = (T // c) * c
+        out_full, mid = mamba_layer(
+            cfg, params, x[:, :n_full], return_cache=True, init_cache=init_cache)
+        out_tail, cache = mamba_layer(
+            cfg, params, x[:, n_full:], return_cache=True, init_cache=mid)
+        out = jnp.concatenate([out_full, out_tail], axis=1)
+        return (out, cache) if return_cache else out
+    xz = dense(params["in_proj"], x)
+    xin_raw, z = xz[..., :di], xz[..., di:]
+    conv_carry_in = None if init_cache is None else init_cache["conv"]
+    xin, _ = _causal_conv(xin_raw, params["conv_w"], params["conv_b"], conv_carry_in)
+    xin = jax.nn.silu(xin)
+    proj = dense(params["x_proj"], xin)  # (B, T, dtr + 2n)
+    dt = jax.nn.softplus(dense(params["dt_proj"], proj[..., :dtr]))  # (B,T,di)
+    B_ssm = proj[..., dtr : dtr + n]
+    C_ssm = proj[..., dtr + n :]
+    A = -jnp.exp(params["A_log"])  # (di, n)
+
+    n_chunks = T // c
+    dtc = jnp.moveaxis(dt.reshape(B, n_chunks, c, di), 1, 0)
+    xc = jnp.moveaxis(xin.reshape(B, n_chunks, c, di), 1, 0)
+    Bc = jnp.moveaxis(B_ssm.reshape(B, n_chunks, c, n), 1, 0)
+    Cc = jnp.moveaxis(C_ssm.reshape(B, n_chunks, c, n), 1, 0)
+
+    from repro.core.annotate import constrain
+
+    def chunk_body(h, xs):
+        dt_i, x_i, B_i, C_i = xs
+        with jax.named_scope("mamba"):
+            dA = constrain(jnp.exp(dt_i[..., None] * A), ("batch", None, "mlp", None))
+            dBx = (dt_i * x_i)[..., None] * B_i[:, :, None, :]
+            dBx = constrain(dBx, ("batch", None, "mlp", None))
+            y, h = _ssm_chunk(h, dA, dBx, C_i)
+            # scan carries lose propagated shardings; re-pin the SSM state
+            h = constrain(h, ("batch", "mlp", None))
+            return h, y
+
+    # nested remat: dA/dBx are (B, c, di, n) per chunk — recompute in bwd
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    h0 = jnp.zeros((B, di, n), x.dtype) if init_cache is None else init_cache["h"]
+    h_last, ys = jax.lax.scan(chunk_body, h0, (dtc, xc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, di)
+    y = y + params["D"] * xin
+    y = y * jax.nn.silu(z)
+    out = dense(params["out_proj"], y)
+    if return_cache:
+        kc_ = cfg.mamba_d_conv - 1
+        if kc_ and T >= kc_:
+            conv_tail = xin_raw[:, -kc_:]
+        elif kc_:  # short segment: splice previous carry with new inputs
+            prev = (jnp.zeros((B, kc_, di), x.dtype) if conv_carry_in is None
+                    else conv_carry_in)
+            conv_tail = jnp.concatenate([prev, xin_raw], axis=1)[:, -kc_:]
+        else:
+            conv_tail = xin_raw[:, :0]
+        cache = {"conv": conv_tail, "h": h_last}
+        return out, cache
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode (bounded state: conv tail + h)
+# --------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.mamba_d_state), dtype),
+    }
+
+
+def mamba_decode(cfg: ArchConfig, params: Params, x_t: jax.Array, cache):
+    """x_t: (B, 1, d) single-token step."""
+    di = cfg.mamba_expand * cfg.d_model
+    n = cfg.mamba_d_state
+    dtr = _dt_rank(cfg)
+    xz = dense(params["in_proj"], x_t)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin, conv_carry = _causal_conv(xin, params["conv_w"], params["conv_b"], cache["conv"])
+    xin = jax.nn.silu(xin)
+    proj = dense(params["x_proj"], xin)
+    dt = jax.nn.softplus(dense(params["dt_proj"], proj[..., :dtr]))[:, 0]  # (B, di)
+    B_ssm = proj[:, 0, dtr : dtr + n]
+    C_ssm = proj[:, 0, dtr + n :]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)  # (B, di, n)
+    dBx = (dt * xin[:, 0])[..., None] * B_ssm[:, None, :]
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm) + params["D"] * xin[:, 0]
+    y = y * jax.nn.silu(z[:, 0])
+    out = dense(params["out_proj"], y[:, None])
+    return out, {"conv": conv_carry, "h": h}

@@ -1,0 +1,532 @@
+"""Model assembly: config → (init, forward, decode) for every family.
+
+Layers are organized into *groups* of ``cfg.block_pattern`` blocks; the stack
+scans over ``cfg.n_groups`` groups with stacked parameters (leading "layers"
+axis), which keeps compile time O(pattern) instead of O(n_layers) and is the
+structure the roofline analyzer's trip-count attribution assumes.  Decode
+threads per-group caches through the same scan.
+
+Enc-dec (whisper) builds an encoder stack (non-causal) plus a decoder stack
+with cross-attention; the modality frontend is a stub — ``input_specs``
+provides precomputed frame/patch embeddings per the assignment brief.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    apply_norm,
+    dense,
+    embed,
+    init_dense,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    mlp,
+    stack_axes,
+    stack_params,
+)
+
+Params = Dict[str, Any]
+
+# activation-sharding hook, installed by repro.runtime.sharding at launch
+_CONSTRAIN = lambda x, names: x  # noqa: E731
+
+
+def set_activation_constraint(fn) -> None:
+    global _CONSTRAIN
+    _CONSTRAIN = fn
+
+
+def constrain(x: jax.Array, names: Tuple[Optional[str], ...]) -> jax.Array:
+    return _CONSTRAIN(x, names)
+
+
+# ==========================================================================
+# Block group
+# ==========================================================================
+
+def _init_block(cfg: ArchConfig, kind: str, pos_in_pattern: int, key: jax.Array):
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    a: Dict[str, Any] = {}
+    p["ln1"], a["ln1"] = init_norm(cfg.d_model, cfg.norm_type)
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            p["attn"], a["attn"] = attn.init_mla(cfg, ks[0])
+        else:
+            p["attn"], a["attn"] = attn.init_attention(cfg, ks[0])
+    elif kind == "mamba":
+        p["attn"], a["attn"] = mamba_mod.init_mamba(cfg, ks[0])
+    elif kind == "mlstm":
+        p["attn"], a["attn"] = xlstm_mod.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["attn"], a["attn"] = xlstm_mod.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if kind in ("attn", "mamba") and (cfg.d_ff or cfg.moe_experts):
+        p["ln2"], a["ln2"] = init_norm(cfg.d_model, cfg.norm_type)
+        if cfg.layer_is_moe(pos_in_pattern):
+            p["mlp"], a["mlp"] = moe_mod.init_moe(cfg, ks[1])
+            p["_moe"] = jnp.zeros(())  # structural marker (not used numerically)
+            a["_moe"] = ()
+        else:
+            p["mlp"], a["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p, a
+
+
+def _block_forward(
+    cfg: ArchConfig,
+    kind: str,
+    bp: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(bp["ln1"], x, cfg.norm_type)
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            y = attn.mla_attention_layer(cfg, bp["attn"], h, positions)
+        else:
+            y = attn.attention_layer(cfg, bp["attn"], h, positions, causal=causal)
+    elif kind == "mamba":
+        y = mamba_mod.mamba_layer(cfg, bp["attn"], h)
+    elif kind == "mlstm":
+        y = xlstm_mod.mlstm_layer(cfg, bp["attn"], h)
+    elif kind == "slstm":
+        y = xlstm_mod.slstm_layer(cfg, bp["attn"], h)
+    else:
+        raise ValueError(kind)
+    x = x + y.astype(x.dtype)
+    x = constrain(x, ("batch", "act_seq", None))
+    if "ln2" in bp:
+        h = apply_norm(bp["ln2"], x, cfg.norm_type)
+        if "_moe" in bp:
+            with jax.named_scope("moe"):
+                y, a = moe_mod.moe_layer(cfg, bp["mlp"], h)
+            aux = aux + a
+        else:
+            y = mlp(bp["mlp"], h)
+        x = x + y.astype(x.dtype)
+        x = constrain(x, ("batch", "act_seq", None))
+    return x, aux
+
+
+def _init_group(cfg: ArchConfig, key: jax.Array):
+    p, a = {}, {}
+    for j, kind in enumerate(cfg.pattern):
+        kj = jax.random.fold_in(key, j)
+        p[f"b{j}"], a[f"b{j}"] = _init_block(cfg, kind, j, kj)
+    return p, a
+
+
+@functools.lru_cache(maxsize=None)
+def _group_axes(cfg: ArchConfig, encdec: bool = False):
+    """Per-group logical axes without materializing arrays (eval_shape)."""
+    box = {}
+
+    def f(k):
+        p, a = _init_group(cfg, k)
+        if encdec:
+            for j in range(len(cfg.pattern)):
+                p[f"b{j}"]["cross"], a[f"b{j}"]["cross"] = attn.init_cross_attention(cfg, k)
+                p[f"b{j}"]["ln_x"], a[f"b{j}"]["ln_x"] = init_norm(cfg.d_model, cfg.norm_type)
+        box["a"] = a
+        return p
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["a"]
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _constrain_group_params(cfg: ArchConfig, gp: Params, encdec: bool = False) -> Params:
+    """Pin each group-param slice (and, by transposition, its gradient
+    cotangent) to its sharded layout inside the scan body.  Without this the
+    backward scan's DP reduction emits full-tensor all-reduces instead of
+    reduce-scatters (ZeRO gradient sharding)."""
+    from repro.core import annotate
+
+    if annotate._HOOK is None:
+        return gp
+    axes = _group_axes(cfg, encdec)
+    flat_p, treedef = jax.tree_util.tree_flatten(gp)
+    flat_a = treedef.flatten_up_to(axes)
+    out = [
+        annotate.constrain(p, a) if _is_axes_leaf(a) and p.ndim == len(a) else p
+        for p, a in zip(flat_p, flat_a)
+    ]
+    return treedef.unflatten(out)
+
+
+def _group_forward(cfg: ArchConfig, gp: Params, x, positions, causal=True):
+    aux = jnp.zeros((), jnp.float32)
+    for j, kind in enumerate(cfg.pattern):
+        x, a = _block_forward(cfg, kind, gp[f"b{j}"], x, positions, causal)
+        aux = aux + a
+    return x, aux
+
+
+# ==========================================================================
+# Decoder-only model
+# ==========================================================================
+
+def init_model(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, Dict]:
+    if cfg.encoder_layers:
+        return _init_encdec(cfg, key)
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["embed"], a["embed"] = init_embedding(ks[0], cfg.padded_vocab, cfg.d_model)
+    if cfg.n_groups > 0:
+        groups = [_init_group(cfg, jax.random.fold_in(ks[1], g))[0] for g in range(cfg.n_groups)]
+        p["blocks"] = stack_params(groups)
+        _, ga = _init_group(cfg, ks[1])
+        a["blocks"] = stack_axes(ga)
+    p["final_norm"], a["final_norm"] = init_norm(cfg.d_model, cfg.norm_type)
+    if not cfg.tie_embeddings:
+        p["head"], a["head"] = init_dense(ks[2], cfg.d_model, cfg.padded_vocab, ("embed", "vocab"))
+    return p, a
+
+
+def _scan_groups(cfg: ArchConfig, stacked: Params, x, positions, causal=True):
+    if cfg.n_groups == 0:  # embedding-bag baseline (paper's MLP-B analogue)
+        return x, jnp.zeros((), jnp.float32)
+
+    def body(carry, gp):
+        x, aux = carry
+        gp = _constrain_group_params(cfg, gp)
+        x, a = _group_forward(cfg, gp, x, positions, causal)
+        return (x, aux + a), ()
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def forward(
+    cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    """batch: {"tokens": (B,T) int32, ["positions"], ["enc_embeds"]}.
+    Returns (logits (B,T,V_padded), aux_loss)."""
+    if cfg.encoder_layers:
+        return _encdec_forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = embed(params["embed"], tokens).astype(_dtype(cfg))
+    x = constrain(x, ("batch", "act_seq", None))
+    x, aux = _scan_groups(cfg, params.get("blocks"), x, positions)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = _head(cfg, params, x)
+    return logits, aux
+
+
+def _head(cfg: ArchConfig, params: Params, x: jax.Array) -> jax.Array:
+    # Stage the ZeRO pattern explicitly: pin the vocab matrix to its FSDP
+    # layout (which also pins the gradient to a reduce-scatter), then re-pin
+    # with the data axis dropped — an all-gather over `data` only.  Without
+    # the second pin GSPMD replicates the full-vocab matrix in fp32.
+    if cfg.tie_embeddings:
+        table = constrain(params["embed"]["table"], ("vocab", "embed"))
+        table = constrain(table, ("vocab", None))
+        logits = x @ table.T.astype(x.dtype)
+    else:
+        head = dict(params["head"])
+        head["w"] = constrain(head["w"], ("embed", "vocab"))
+        head["w"] = constrain(head["w"], (None, "vocab"))
+        logits = dense(head, x)
+    # vocab-sharded logits (act_seq would collide with vocab on the model
+    # axis); the loss reduces over the sharded vocab with a small psum
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def _dtype(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def loss_fn(
+    cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    zloss = 1e-4 * jnp.mean(jnp.square(logz))
+    total = loss + zloss + 1e-2 * aux
+    return total, {"nll": loss, "aux": aux, "zloss": zloss}
+
+
+# ==========================================================================
+# Decode
+# ==========================================================================
+
+def _init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            return attn.init_mla_cache(cfg, batch, max_len, dtype)
+        return attn.init_attention_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    group_cache = {
+        f"b{j}": _init_block_cache(cfg, kind, batch, max_len, dtype)
+        for j, kind in enumerate(cfg.pattern)
+    }
+    return stack_params([group_cache] * cfg.n_groups)
+
+
+def _block_decode(cfg: ArchConfig, kind: str, bp: Params, x_t, position, cache):
+    h = apply_norm(bp["ln1"], x_t, cfg.norm_type)
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            y, cache = attn.mla_decode(cfg, bp["attn"], h, position, cache)
+        else:
+            y, cache = attn.attention_decode(cfg, bp["attn"], h, position, cache)
+    elif kind == "mamba":
+        y, cache = mamba_mod.mamba_decode(cfg, bp["attn"], h, cache)
+    elif kind == "mlstm":
+        y, cache = xlstm_mod.mlstm_decode(cfg, bp["attn"], h, cache)
+    elif kind == "slstm":
+        y, cache = xlstm_mod.slstm_decode(cfg, bp["attn"], h, cache)
+    else:
+        raise ValueError(kind)
+    x_t = x_t + y.astype(x_t.dtype)
+    if "ln2" in bp:
+        h = apply_norm(bp["ln2"], x_t, cfg.norm_type)
+        if "_moe" in bp:
+            y, _ = moe_mod.moe_layer(cfg, bp["mlp"], h)
+        else:
+            y = mlp(bp["mlp"], h)
+        x_t = x_t + y.astype(x_t.dtype)
+    return x_t, cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Params,
+    token: jax.Array,  # (B,) int32
+    position: jax.Array,  # (B,) int32
+    caches,
+) -> Tuple[jax.Array, Any]:
+    """One non-iterative serve step: (B,) token -> (B, V) logits."""
+    if cfg.encoder_layers:
+        return _encdec_decode_step(cfg, params, token, position, caches)
+    x = embed(params["embed"], token[:, None]).astype(_dtype(cfg))
+
+    def body(x, xs):
+        gp, gc = xs
+        for j, kind in enumerate(cfg.pattern):
+            x, gc_j = _block_decode(cfg, kind, gp[f"b{j}"], x, position, gc[f"b{j}"])
+            gc = {**gc, f"b{j}": gc_j}
+        return x, gc
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, new_caches
+
+
+# ==========================================================================
+# Encoder-decoder (whisper)
+# ==========================================================================
+
+def _init_encdec(cfg: ArchConfig, key: jax.Array):
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    # stub frontend adapter: precomputed frame embeddings -> model width
+    p["enc_in"], a["enc_in"] = init_dense(ks[0], cfg.d_model, cfg.d_model, ("embed", "embed"))
+    enc_cfg = dataclasses.replace(cfg, block_pattern=("attn",))
+    n_enc_groups = cfg.encoder_layers
+    groups = [_init_group(enc_cfg, jax.random.fold_in(ks[1], g))[0] for g in range(n_enc_groups)]
+    p["enc_blocks"] = stack_params(groups)
+    _, ga = _init_group(enc_cfg, ks[1])
+    a["enc_blocks"] = stack_axes(ga)
+    p["enc_norm"], a["enc_norm"] = init_norm(cfg.d_model, cfg.norm_type)
+
+    p["embed"], a["embed"] = init_embedding(ks[2], cfg.padded_vocab, cfg.d_model)
+    dec_groups = []
+    for g in range(cfg.n_groups):
+        kg = jax.random.fold_in(ks[3], g)
+        gp, ga2 = _init_group(cfg, kg)
+        for j in range(len(cfg.pattern)):
+            kj = jax.random.fold_in(kg, 1000 + j)
+            gp[f"b{j}"]["cross"], ga2[f"b{j}"]["cross"] = attn.init_cross_attention(cfg, kj)
+            gp[f"b{j}"]["ln_x"], ga2[f"b{j}"]["ln_x"] = init_norm(cfg.d_model, cfg.norm_type)
+        dec_groups.append(gp)
+    p["blocks"] = stack_params(dec_groups)
+    a["blocks"] = stack_axes(ga2)
+    p["final_norm"], a["final_norm"] = init_norm(cfg.d_model, cfg.norm_type)
+    p["head"], a["head"] = init_dense(ks[4], cfg.d_model, cfg.padded_vocab, ("embed", "vocab"))
+    return p, a
+
+
+def encode(cfg: ArchConfig, params: Params, enc_embeds: jax.Array) -> jax.Array:
+    """enc_embeds: (B, Te, d) precomputed frontend embeddings (stub)."""
+    x = dense(params["enc_in"], enc_embeds.astype(_dtype(cfg)))
+    B, Te, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Te), (B, Te))
+    # non-causal encoder: attention_layer routes causal=False to softmax
+    # (Chimera's streaming state is inherently causal; see DESIGN.md §5)
+    enc_cfg = dataclasses.replace(cfg, block_pattern=("attn",))
+
+    def body(carry, gp):
+        x, aux = carry
+        x, a = _group_forward(enc_cfg, gp, x, positions, causal=False)
+        return (x, aux + a), ()
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, cfg.norm_type)
+
+
+def _encdec_forward(cfg: ArchConfig, params: Params, batch):
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = embed(params["embed"], tokens).astype(_dtype(cfg))
+
+    def body(carry, gp):
+        x, aux = carry
+        gp = _constrain_group_params(cfg, gp, encdec=True)
+        for j, kind in enumerate(cfg.pattern):
+            bp = gp[f"b{j}"]
+            x, a = _block_forward(cfg, kind, bp, x, positions, causal=True)
+            kv = attn.encode_cross_kv(cfg, bp["cross"], enc_out)
+            h = apply_norm(bp["ln_x"], x, cfg.norm_type)
+            x = x + attn.cross_attention_layer(cfg, bp["cross"], h, kv).astype(x.dtype)
+            aux = aux + a
+        return (x, aux), ()
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    return _head(cfg, params, x), aux
+
+
+def init_encdec_caches(cfg: ArchConfig, params: Params, enc_embeds, batch, max_len, dtype=None):
+    """Decode caches for enc-dec: self-attn cache + precomputed cross kv."""
+    dtype = dtype or _dtype(cfg)
+    enc_out = encode(cfg, params, enc_embeds)
+
+    def per_group(gp):
+        return {
+            f"b{j}": {
+                "self": _init_block_cache(cfg, kind, batch, max_len, dtype),
+                "cross_kv": attn.encode_cross_kv(cfg, gp[f"b{j}"]["cross"], enc_out),
+            }
+            for j, kind in enumerate(cfg.pattern)
+        }
+
+    return jax.lax.map(per_group, params["blocks"])
+
+
+def _encdec_decode_step(cfg: ArchConfig, params: Params, token, position, caches):
+    x = embed(params["embed"], token[:, None]).astype(_dtype(cfg))
+
+    def body(x, xs):
+        gp, gc = xs
+        new_gc = dict(gc)
+        for j, kind in enumerate(cfg.pattern):
+            bp = gp[f"b{j}"]
+            x, c_j = _block_decode(cfg, kind, bp, x, position, gc[f"b{j}"]["self"])
+            h = apply_norm(bp["ln_x"], x, cfg.norm_type)
+            x = x + attn.cross_attention_layer(cfg, bp["cross"], h, gc[f"b{j}"]["cross_kv"]).astype(x.dtype)
+            new_gc[f"b{j}"] = {"self": c_j, "cross_kv": gc[f"b{j}"]["cross_kv"]}
+        return x, new_gc
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, new_caches
+
+
+# ==========================================================================
+# Chunked fast prefill (serving): forward the whole prompt once, emitting
+# both next-token logits and every layer's decode cache
+# ==========================================================================
+
+def _block_prefill(cfg: ArchConfig, kind: str, bp: Params, x, positions, max_len):
+    h = apply_norm(bp["ln1"], x, cfg.norm_type)
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            y, cache = attn.mla_prefill(cfg, bp["attn"], h, positions, max_len)
+        else:
+            y, cache = attn.attention_prefill(cfg, bp["attn"], h, positions, max_len)
+    elif kind == "mamba":
+        y, cache = mamba_mod.mamba_layer(cfg, bp["attn"], h, return_cache=True)
+    elif kind == "mlstm":
+        y, cache = xlstm_mod.mlstm_layer(cfg, bp["attn"], h, return_cache=True)
+    elif kind == "slstm":
+        y, cache = xlstm_mod.slstm_layer(cfg, bp["attn"], h, return_cache=True)
+    else:
+        raise ValueError(kind)
+    x = x + y.astype(x.dtype)
+    if "ln2" in bp:
+        h = apply_norm(bp["ln2"], x, cfg.norm_type)
+        if "_moe" in bp:
+            y, _ = moe_mod.moe_layer(cfg, bp["mlp"], h)
+        else:
+            y = mlp(bp["mlp"], h)
+        x = x + y.astype(x.dtype)
+    return x, cache
+
+
+def prefill_with_caches(
+    cfg: ArchConfig, params: Params, tokens: jax.Array, max_len: int
+):
+    """tokens (B, T) -> (next-token logits (B, V), decode caches).
+
+    One chunk-parallel forward builds every layer's bounded decode state —
+    identical continuation semantics to feeding the prompt through
+    ``decode_step`` token-by-token (tested), at forward-pass cost.
+    """
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = embed(params["embed"], tokens).astype(_dtype(cfg))
+
+    def body(x, gp):
+        caches = {}
+        for j, kind in enumerate(cfg.pattern):
+            x, caches[f"b{j}"] = _block_prefill(
+                cfg, kind, gp[f"b{j}"], x, positions, max_len
+            )
+        return x, caches
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = _head(cfg, params, x[:, -1:])[:, 0]
+    return logits, caches

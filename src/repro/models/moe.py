@@ -1,0 +1,95 @@
+"""Mixture-of-Experts layer (Mixtral / Moonlight / Jamba families).
+
+Group-limited capacity-factor einsum dispatch (Mesh-TensorFlow style): tokens
+are partitioned into groups of ``group_size``, each group dispatches to a
+per-expert capacity C = ⌈group·top_k·cf/E⌉.  The dispatch/combine tensors are
+(G, g, E, C) with G carrying the batch sharding and E the expert (model-axis)
+sharding, so GSPMD lowers the dispatch einsums into the EP all-to-all
+pattern.  Dropped tokens (over capacity) fall back to the residual stream,
+standard for capacity-factor MoE.
+
+Returns the load-balancing auxiliary loss (Switch-style) alongside outputs.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import init_dense, init_mlp, mlp
+
+Params = dict
+
+MOE_GROUP_SIZE = 512
+
+
+def init_moe(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, dict]:
+    d = cfg.d_model
+    e_ff = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.moe_experts
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["router"], a["router"] = init_dense(ks[0], d, E, ("embed", None))
+    scale = 1.0 / jnp.sqrt(d)
+    p["wi"] = jax.random.normal(ks[1], (E, d, e_ff)) * scale
+    p["wg"] = jax.random.normal(ks[2], (E, d, e_ff)) * scale
+    p["wo"] = jax.random.normal(ks[3], (E, e_ff, d)) * (1.0 / jnp.sqrt(e_ff))
+    a["wi"] = ("experts", "embed", "moe_mlp")
+    a["wg"] = ("experts", "embed", "moe_mlp")
+    a["wo"] = ("experts", "moe_mlp", "embed")
+    if cfg.moe_shared_experts:
+        shared_ff = e_ff * cfg.moe_shared_experts
+        p["shared"], a["shared"] = init_mlp(ks[4], d, shared_ff)
+    return p, a
+
+
+def moe_layer(
+    cfg: ArchConfig, params: Params, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) -> (out (B, T, d), aux_loss ())."""
+    B, T, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    g = min(MOE_GROUP_SIZE, T)
+    N = B * T
+    assert N % g == 0, (N, g)
+    G = N // g
+    C = max(1, int(g * k * cfg.capacity_factor / E))
+    xg = x.reshape(G, g, d)
+
+    logits = jnp.einsum("sgd,de->sge", xg, params["router"]["w"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)  # (G, g, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # position of each selection within its expert's capacity buffer
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)  # (G, g, k, E)
+    flat = onehot.reshape(G, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1.0  # (G, g*k, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, g, k)  # (G, g, k)
+    keep = (pos < C).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+    disp = jnp.einsum("sgke,sgkc->sgec", onehot, pos_oh * keep[..., None])
+    comb = jnp.einsum("sgke,sgkc,sgk->sgec", onehot, pos_oh * keep[..., None], gates)
+
+    from repro.core.annotate import constrain
+
+    expert_in = jnp.einsum("sgec,sgd->secd", disp, xg)  # (G, E, C, d)
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+    h = jax.nn.silu(jnp.einsum("secd,edf->secf", expert_in, params["wg"]))
+    h = h * jnp.einsum("secd,edf->secf", expert_in, params["wi"])
+    h = constrain(h, ("batch", "experts", None, "moe_mlp"))
+    y = jnp.einsum("secf,efd->secd", h, params["wo"])
+    y = constrain(y, ("batch", "experts", None, None))
+    out = jnp.einsum("sgec,secd->sgd", comb, y).reshape(B, T, d)
+
+    if cfg.moe_shared_experts:
+        out = out + mlp(params["shared"], x)
+
+    # Switch load-balance loss: E·Σ_e f_e·P_e
+    f_e = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))  # fraction routed
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e / k * p_e)
+    return out, aux

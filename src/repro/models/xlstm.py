@@ -1,0 +1,252 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+The mLSTM recurrence C_t = f_t·C_{t-1} + i_t·v_t k_tᵀ **is** the paper's
+Eq. 9 with gating — the same chunked machinery as Chimera's stream is used
+(intra-chunk decayed scores + carried (C, n) state).  Hardware adaptation
+note (DESIGN.md §2/§5): we use sigmoid input/forget gates (log-gates ≤ 0)
+instead of xLSTM's exp input gate + m_t stabilizer — the bounded-gate
+formulation is the numerically equivalent stabilized form and keeps every
+chunk factor ≤ 1, which is also what the fixed-point dataplane variant
+requires (Thm A.3 boundedness).
+
+sLSTM has a sequential h_{t-1} dependence (recurrent R matrices) and cannot
+be chunk-parallelized; it runs as a per-token scan (named scope "slstm").
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, init_dense
+
+Params = dict
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+def init_mlstm(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, dict]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    di = 2 * d  # xLSTM up-projection factor 2
+    dh = di // H
+    ks = jax.random.split(key, 7)
+    p, a = {}, {}
+    p["up"], a["up"] = init_dense(ks[0], d, 2 * di, ("embed", "mlp"))
+    p["wq"], a["wq"] = init_dense(ks[1], di, di, ("mlp", "heads"))
+    p["wk"], a["wk"] = init_dense(ks[2], di, di, ("mlp", "heads"))
+    p["wv"], a["wv"] = init_dense(ks[3], di, di, ("mlp", "heads"))
+    p["w_if"], a["w_if"] = init_dense(ks[4], di, 2 * H, ("mlp", None), bias=True)
+    p["down"], a["down"] = init_dense(ks[5], di, d, ("mlp", "embed"))
+    del dh
+    return p, a
+
+
+def _mlstm_chunked(
+    q: jax.Array,  # (B, H, T, dh)
+    k: jax.Array,
+    v: jax.Array,
+    logi: jax.Array,  # (B, H, T) ≤ 0
+    logf: jax.Array,  # (B, H, T) ≤ 0
+    chunk: int,
+    state=None,
+):
+    B, H, T, dh = q.shape
+    c = min(chunk, T)
+    if T % c != 0:  # ragged prompt: full chunks then a tail chunk
+        n_full = (T // c) * c
+        out_full, st = _mlstm_chunked(
+            q[:, :, :n_full], k[:, :, :n_full], v[:, :, :n_full],
+            logi[:, :, :n_full], logf[:, :, :n_full], chunk=c, state=state)
+        out_tail, st = _mlstm_chunked(
+            q[:, :, n_full:], k[:, :, n_full:], v[:, :, n_full:],
+            logi[:, :, n_full:], logf[:, :, n_full:], chunk=T - n_full, state=st)
+        return jnp.concatenate([out_full, out_tail], axis=2), st
+    n_chunks = T // c
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), q.dtype)
+        n0 = jnp.zeros((B, H, dh), q.dtype)
+    else:
+        C0, n0 = state
+
+    qc = jnp.moveaxis(q.reshape(B, H, n_chunks, c, dh), 2, 0)
+    kc = jnp.moveaxis(k.reshape(B, H, n_chunks, c, dh), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, H, n_chunks, c, dh), 2, 0)
+    lic = jnp.moveaxis(logi.reshape(B, H, n_chunks, c), 2, 0)
+    lfc = jnp.moveaxis(logf.reshape(B, H, n_chunks, c), 2, 0)
+    causal = jnp.tril(jnp.ones((c, c), q.dtype))
+
+    from repro.core.annotate import constrain
+
+    inv_sqrt_dh = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+
+    def body(carry, xs):
+        C, n = carry
+        q_i, k_i, v_i, li, lf = xs
+        q_i = q_i * inv_sqrt_dh  # scale queries once: consistent across terms
+        with jax.named_scope("mlstm"):
+            F = jnp.cumsum(lf, axis=-1)  # (B,H,c) — F_t = Σ_{τ≤t} logf
+            # decay(s→t) = exp(F_t − F_s); score = q·k · decay · i_s
+            w = jnp.exp(F[..., :, None] - F[..., None, :] + li[..., None, :])
+            w = w * causal
+            s = jnp.einsum("bhid,bhjd->bhij", q_i, k_i) * w
+            num = jnp.einsum("bhij,bhjd->bhid", s, v_i)
+            den = jnp.einsum("bhij,bhjd->bhid", s, jnp.ones_like(v_i[..., :1]))[..., 0]
+            # carried-state contribution: decay exp(F_t)
+            dq = jnp.exp(F)[..., None] * q_i
+            num = num + jnp.einsum("bhid,bhde->bhie", dq, C)
+            den = den + jnp.einsum("bhid,bhd->bhi", dq, n)
+            out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+            # fold chunk into state with tail decays exp(F_last − F_s + logi_s)
+            tail = jnp.exp(F[..., -1:] - F + li)  # (B,H,c)
+            C = jnp.exp(F[..., -1])[..., None, None] * C + jnp.einsum(
+                "bhj,bhjd,bhje->bhde", tail, k_i, v_i
+            )
+            n = jnp.exp(F[..., -1])[..., None] * n + jnp.einsum(
+                "bhj,bhjd->bhd", tail, k_i
+            )
+            # scan carries lose propagated shardings; re-pin per-head state
+            C = constrain(C, ("batch", "heads", None, None))
+            n = constrain(n, ("batch", "heads", None))
+            return (C, n), out
+
+    body = jax.checkpoint(body, prevent_cse=False)  # nested remat
+    (C, n), outs = jax.lax.scan(body, (C0, n0), (qc, kc, vc, lic, lfc))
+    return jnp.moveaxis(outs, 0, 2).reshape(B, H, T, dh), (C, n)
+
+
+def mlstm_layer(cfg: ArchConfig, params: Params, x: jax.Array, return_cache: bool = False):
+    B, T, d = x.shape
+    H = cfg.n_heads
+    di = 2 * d
+    dh = di // H
+    uz = dense(params["up"], x)
+    u, z = uz[..., :di], uz[..., di:]
+    q = dense(params["wq"], u).reshape(B, T, H, dh).transpose(0, 2, 1, 3)
+    k = dense(params["wk"], u).reshape(B, T, H, dh).transpose(0, 2, 1, 3)
+    v = dense(params["wv"], u).reshape(B, T, H, dh).transpose(0, 2, 1, 3)
+    gates = dense(params["w_if"], u).reshape(B, T, 2, H)
+    logi = jax.nn.log_sigmoid(gates[:, :, 0]).transpose(0, 2, 1)  # (B,H,T)
+    logf = jax.nn.log_sigmoid(gates[:, :, 1]).transpose(0, 2, 1)
+    o, (Cst, nst) = _mlstm_chunked(q, k, v, logi, logf, chunk=cfg.chimera.chunk_size)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, di)
+    out = dense(params["down"], o * jax.nn.silu(z))
+    if return_cache:
+        return out, {"C": Cst, "n": nst}
+    return out
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = 2 * d // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+    }
+
+
+def mlstm_decode(cfg: ArchConfig, params: Params, x_t: jax.Array, cache):
+    B = x_t.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    di = 2 * d
+    dh = di // H
+    uz = dense(params["up"], x_t)
+    u, z = uz[..., :di], uz[..., di:]
+    q = dense(params["wq"], u).reshape(B, H, dh)
+    k = dense(params["wk"], u).reshape(B, H, dh)
+    v = dense(params["wv"], u).reshape(B, H, dh)
+    gates = dense(params["w_if"], u).reshape(B, 2, H)
+    i_g = jax.nn.sigmoid(gates[:, 0])[..., None]
+    f_g = jax.nn.sigmoid(gates[:, 1])[..., None]
+    C = f_g[..., None] * cache["C"] + i_g[..., None] * k[..., :, None] * v[..., None, :]
+    n = f_g * cache["n"] + i_g * k
+    q = q / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    o = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    o = o.reshape(B, 1, di)
+    out = dense(params["down"], o * jax.nn.silu(z))
+    return out, {"C": C, "n": n}
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+def init_slstm(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, dict]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["wx"], a["wx"] = init_dense(ks[0], d, 4 * d, ("embed", "heads"), bias=True)
+    # recurrent weights are head-block-diagonal: (H, dh, 4*dh)
+    p["r"] = jax.random.normal(ks[1], (H, dh, 4 * dh)) / jnp.sqrt(dh)
+    a["r"] = ("heads", None, None)
+    p["out"], a["out"] = init_dense(ks[2], d, d, ("embed", "embed2"))
+    return p, a
+
+
+def slstm_layer(cfg: ArchConfig, params: Params, x: jax.Array, return_cache: bool = False):
+    """Per-token recurrent scan (sequential; scope "slstm")."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    wx = dense(params["wx"], x).reshape(B, T, H, 4 * dh)
+
+    def step(carry, xs):
+        c, n, h, m = carry  # each (B, H, dh); m is the stabilizer
+        wx_t = xs  # (B, H, 4dh)
+        with jax.named_scope("slstm"):
+            rec = jnp.einsum("bhd,hde->bhe", h, params["r"])
+            g = wx_t + rec
+            zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+            logf = jax.nn.log_sigmoid(ft)
+            m_new = jnp.maximum(logf + m, it)
+            i_s = jnp.exp(it - m_new)
+            f_s = jnp.exp(logf + m - m_new)
+            c = f_s * c + i_s * jnp.tanh(zt)
+            n = f_s * n + i_s
+            h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+            return (c, n, h, m_new), h
+
+    zeros = jnp.zeros((B, H, dh), x.dtype)
+    init = (zeros, zeros, zeros, zeros)
+    (c, n, h, m_), hs = jax.lax.scan(step, init, jnp.moveaxis(wx, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, T, d)
+    out = dense(params["out"], out)
+    if return_cache:
+        return out, {"c": c, "n": n, "h": h, "m": m_}
+    return out
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    dh = cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, cfg.n_heads, dh), dtype)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_decode(cfg: ArchConfig, params: Params, x_t: jax.Array, cache):
+    B = x_t.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    wx_t = dense(params["wx"], x_t).reshape(B, H, 4 * dh)
+    rec = jnp.einsum("bhd,hde->bhe", cache["h"], params["r"])
+    g = wx_t + rec
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + cache["m"], it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + cache["m"] - m_new)
+    c = f_s * cache["c"] + i_s * jnp.tanh(zt)
+    n = f_s * cache["n"] + i_s
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    out = dense(params["out"], h.reshape(B, 1, cfg.d_model))
+    return out, {"c": c, "n": n, "h": h, "m": m_new}

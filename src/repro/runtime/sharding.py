@@ -1,0 +1,244 @@
+"""Logical-axis sharding rules engine (MaxText-style, dependency-free).
+
+Every parameter pytree is accompanied by an ``axes`` pytree of logical dim
+names.  Rules map logical names → mesh axes; :func:`spec_for` resolves a
+concrete ``PartitionSpec`` with two safety passes:
+
+* **divisibility fallback** — a dim that does not divide evenly by its mesh
+  axis is left unsharded (e.g. MiniCPM3's 40 heads on a 16-way model axis);
+* **duplicate-axis resolution** — if two dims of one tensor resolve to the
+  same mesh axis, the later dim is dropped (first dim wins).
+
+Rule presets:
+
+* ``base``  — TP over ``model`` (heads/mlp/vocab/experts), batch over
+  (pod, data), parameters replicated across data (pure DP).
+* ``fsdp``  — adds ZeRO-3: the ``embed`` dim of parameters shards over
+  ``data`` (and optimizer state follows), gathered per layer inside the scan.
+* ``fsdp_pod`` — additionally folds the ``pod`` axis into parameter
+  sharding for ≥100B models (Jamba-398B needs optimizer state spread over
+  all 512 chips).
+* ``sp``   — activation sequence dim over ``data`` (long-context prefill).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+
+    def lookup(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+
+BASE_RULES = (
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("act_seq", None),  # residual-stream seq dim (Megatron-style SP when set)
+    ("vocab", "model"),
+    ("embed", None),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", None),
+    ("mlp", "model"),
+    # experts shard over model when divisible (EP); otherwise the duplicate/
+    # divisibility fallback drops `experts` and `moe_mlp` takes the model
+    # axis (tensor-parallel expert FFNs — Mixtral's 8 experts on 16-way TP)
+    ("moe_mlp", "model"),
+    ("experts", "model"),
+    ("layers", None),
+)
+
+
+def make_rules(
+    mode: str = "fsdp", seq_sharded: bool = False, act_sp: bool = True
+) -> ShardingRules:
+    rules = dict(BASE_RULES)
+    if mode == "base":
+        pass
+    elif mode == "fsdp":
+        rules["embed"] = "data"
+    elif mode == "fsdp_pod":
+        rules["embed"] = ("pod", "data")
+    else:
+        raise ValueError(mode)
+    if act_sp:
+        # Megatron sequence parallelism: the residual stream between blocks
+        # shards its seq dim over the TP axis — cuts per-device activation
+        # stashes (scan carries under remat) by the TP degree; GSPMD inserts
+        # the all-gather at QKV/MLP entry and reduce-scatter at exit.
+        rules["act_seq"] = "model"
+    if seq_sharded:
+        rules["seq"] = "data"
+        rules["batch"] = "pod"
+        rules["act_seq"] = ("data", "model") if act_sp else "data"
+    return ShardingRules(tuple(rules.items()))
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Drop mesh axes that don't exist in this mesh (e.g. 'pod' single-pod)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def spec_for(
+    rules: ShardingRules,
+    mesh: Mesh,
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+) -> P:
+    used: set = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        axes = _present(mesh, rules.lookup(name))
+        if axes is None:
+            out.append(None)
+            continue
+        flat = (axes,) if isinstance(axes, str) else tuple(axes)
+        if any(a in used for a in flat):
+            out.append(None)  # duplicate-axis resolution: first dim wins
+            continue
+        if dim % _axis_size(mesh, axes) != 0:
+            out.append(None)  # divisibility fallback
+            continue
+        used.update(flat)
+        out.append(axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(
+    mesh: Mesh,
+    rules: ShardingRules,
+    shapes_tree: Any,  # pytree of arrays or ShapeDtypeStructs
+    axes_tree: Any,  # matching pytree of logical-axis tuples
+):
+    """NamedSharding pytree for (shapes, logical axes)."""
+
+    def one(shape_like, axes):
+        spec = spec_for(rules, mesh, axes, shape_like.shape)
+        return NamedSharding(mesh, spec)
+
+    return _tree_map_axes(one, shapes_tree, axes_tree)
+
+
+def _tree_map_axes(fn, shapes_tree, axes_tree):
+    """tree_map where axes_tree leaves are tuples (pytree-internal otherwise)."""
+    flat_shapes, treedef = jax.tree_util.tree_flatten(shapes_tree)
+    flat_axes = treedef.flatten_up_to(axes_tree)
+    return treedef.unflatten([fn(s, a) for s, a in zip(flat_shapes, flat_axes)])
+
+
+def install_activation_constraints(mesh: Mesh, rules: ShardingRules) -> None:
+    """Wire the logical-name annotation hook to with_sharding_constraint."""
+    from repro.core import annotate
+    from repro.models import model as model_mod
+
+    def constrain(x: jax.Array, names):
+        spec = spec_for(rules, mesh, names, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    annotate.install(constrain)
+    model_mod.set_activation_constraint(constrain)
+
+
+def clear_activation_constraints() -> None:
+    from repro.core import annotate
+    from repro.models import model as model_mod
+
+    annotate.clear()
+    model_mod.set_activation_constraint(lambda x, names: x)
+
+
+# --------------------------------------------------------------------------
+# Cache logical axes (decode state shardings)
+# --------------------------------------------------------------------------
+
+def cache_axes(cfg) -> Any:
+    """Logical axes for `model.init_caches(cfg, ...)` structures."""
+    from repro.core.chimera_attention import ChimeraState
+
+    def block_axes(kind: str):
+        if kind == "attn":
+            if cfg.attention_kind == "mla" and not cfg.use_chimera:
+                return {"c_kv": ("batch", None, None), "k_r": ("batch", None, None)}
+            if cfg.use_chimera:
+                heads = "heads" if cfg.attention_kind == "mla" else "kv_heads"
+                return ChimeraState(
+                    S=("batch", heads, None, None),
+                    Z=("batch", heads, None),
+                    k_buf=("batch", heads, None, "head_dim"),
+                    v_buf=("batch", heads, None, "head_dim"),
+                    count=("batch",),
+                )
+            return {
+                "k": ("batch", "kv_heads", None, "head_dim"),
+                "v": ("batch", "kv_heads", None, "head_dim"),
+            }
+        if kind == "mamba":
+            return {"conv": ("batch", None, "mlp"), "h": ("batch", "mlp", None)}
+        if kind == "mlstm":
+            return {"C": ("batch", "heads", None, None), "n": ("batch", "heads", None)}
+        if kind == "slstm":
+            return {
+                "c": ("batch", "heads", None),
+                "n": ("batch", "heads", None),
+                "h": ("batch", "heads", None),
+                "m": ("batch", "heads", None),
+            }
+        raise ValueError(kind)
+
+    group = {f"b{j}": block_axes(kind) for j, kind in enumerate(cfg.pattern)}
+    prepend = lambda a: ("layers",) + tuple(a)  # noqa: E731
+    return jax.tree_util.tree_map(prepend, group, is_leaf=_is_axes_leaf)
+
+
+def encdec_cache_axes(cfg) -> Any:
+    base = cache_axes(cfg)
+    out = {}
+    for j, kind in enumerate(cfg.pattern):
+        out[f"b{j}"] = {
+            "self": base[f"b{j}"],
+            "cross_kv": (
+                ("layers", "batch", "heads", None, "head_dim"),
+                ("layers", "batch", "heads", None, "head_dim"),
+            ),
+        }
+    return out

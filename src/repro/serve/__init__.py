@@ -1,0 +1,1 @@
+"""Serving: batched decode engine with bounded Chimera state."""

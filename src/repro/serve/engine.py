@@ -1,0 +1,159 @@
+"""Batched serving engine.
+
+Slot-based continuous batching over the non-iterative ``decode_step``:
+``submit`` fills a free slot with a prompt; every ``step()`` decodes one
+token for all active slots (prompt tokens are teacher-forced through the
+same step — with Chimera attention the prompt ingestion *is* the paper's
+per-packet streaming path, so prefill and decode share one code path and
+one bounded per-slot state).  Greedy or temperature sampling; slots free on
+EOS or length cap.
+
+The per-slot state is O(L·d + m·d_v) regardless of how long the request
+context grows — the serving-side realization of the paper's per-flow SRAM
+bound (Eq. 11/13).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M  # noqa: F401  (prefill_batch uses M)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: int = -1  # -1: never
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        batch_slots: int = 8,
+        max_len: int = 4096,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.caches = M.init_caches(cfg, batch_slots, max_len, dtype=jnp.float32)
+        self._zero_caches = self.caches
+        self.positions = np.zeros((batch_slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.pending: List[Request] = []
+        self._next_token = np.zeros((batch_slots,), np.int32)
+        self._step = jax.jit(
+            lambda p, tok, pos, c: M.decode_step(cfg, p, tok, pos, c)
+        )
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.active[i] = req
+                self.positions[i] = 0
+                self._next_token[i] = req.prompt[0]
+                # per-slot state reset (batched pytree: zero this slot)
+                self.caches = jax.tree_util.tree_map(
+                    lambda c, z: c.at[:, i].set(z[:, i])
+                    if c.ndim >= 2 and c.shape[1] == self.slots
+                    else c,
+                    self.caches,
+                    self._zero_caches,
+                )
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[int, List[int]]:
+        """One engine tick: decode one token for every active slot."""
+        self._fill_slots()
+        if not any(r is not None for r in self.active):
+            return {}
+        tokens = jnp.asarray(self._next_token)
+        positions = jnp.asarray(self.positions)
+        logits, self.caches = self._step(self.params, tokens, positions, self.caches)
+        logits = np.asarray(logits, np.float32)
+        emitted: Dict[int, List[int]] = {}
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.positions[i] += 1
+            pos = int(self.positions[i])
+            if pos < len(req.prompt):
+                # still ingesting the prompt (teacher forcing)
+                self._next_token[i] = req.prompt[pos]
+                continue
+            if self.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                probs = jax.nn.softmax(jnp.asarray(logits[i]) / self.temperature)
+                nxt = int(jax.random.choice(sub, logits.shape[-1], p=probs))
+            else:
+                nxt = int(np.argmax(logits[i][: self.cfg.vocab_size]))
+            req.generated.append(nxt)
+            emitted.setdefault(req.rid, []).append(nxt)
+            self._next_token[i] = nxt
+            if (
+                nxt == req.eos_id
+                or len(req.generated) >= req.max_new_tokens
+                or pos >= self.max_len - 1
+            ):
+                req.done = True
+                self.active[i] = None
+        return emitted
+
+    def run_until_done(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.pending and all(r is None for r in self.active):
+                return
+            self.step()
+
+    # ------------------------------------------------------------------
+    def prefill_batch(self, requests) -> None:
+        """Fast path: ingest same-or-ragged-length prompts for a full batch
+        of slots in ONE chunk-parallel forward (`model.prefill_with_caches`)
+        instead of token-by-token teacher forcing.  Prompts are left-aligned
+        and processed at the max length; shorter prompts are re-synced by
+        replaying only their remainder through the step path.
+        """
+        import numpy as np
+
+        assert len(requests) <= self.slots, "more requests than slots"
+        min_len = min(len(r.prompt) for r in requests)
+        # common prefix length: prefill everyone to min_len - 1 tokens (the
+        # last token goes through step() so its logits drive sampling)
+        pre = max(0, min_len - 1)
+        if pre > 0:
+            batch_tokens = np.zeros((self.slots, pre), np.int32)
+            for i, r in enumerate(requests):
+                batch_tokens[i] = r.prompt[:pre]
+            _, caches = M.prefill_with_caches(
+                self.cfg, self.params, jnp.asarray(batch_tokens), max_len=self.max_len
+            )
+            # cast cache leaves to the engine's cache dtypes (prefill runs in
+            # the model compute dtype)
+            self.caches = jax.tree_util.tree_map(
+                lambda c, z: c.astype(z.dtype), caches, self._zero_caches
+            )
+        for i, r in enumerate(requests):
+            self.active[i] = r
+            self.positions[i] = pre
+            self._next_token[i] = r.prompt[pre]

@@ -1,0 +1,1 @@
+"""Training: step functions, trainer loop, classifier heads."""

@@ -1,0 +1,163 @@
+"""The paper's own task head: neuro-symbolic traffic classification.
+
+Backbone (Chimera attention over packet-token streams) → pooled features →
+* class head (Table 1 macro-F1 metric),
+* neural anomaly score s_nn,
+* symbolic path: packet-marker presence bitmap → packed signature →
+  TCAM ternary match against the RuleSet → 𝕀_sym + soft score s_sym
+  (compiled HL-MRF weights),
+* cascade fusion (Eq. 15) → trust score S.
+
+This module *is* Algorithm 1's runtime: every step is non-iterative and
+composed of Partition/Map/SumReduce + table lookups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import fusion as fusion_mod
+from repro.core import symbolic
+from repro.models import model as M
+from repro.models.layers import init_dense, dense
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierConfig:
+    arch: ArchConfig
+    n_classes: int = 8
+    marker_base: int = 256  # tokens >= marker_base are field markers
+    sig_words: int = 8  # 256 marker bits -> 8 uint32 words
+    lambda_h: bool = True
+
+
+def hidden_states(cfg: ArchConfig, params, batch) -> jax.Array:
+    """Backbone final-norm hidden states (B, T, d)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = M.embed(params["embed"], tokens).astype(jnp.float32)
+    x, _ = M._scan_groups(cfg, params.get("blocks"), x, positions)
+    return M.apply_norm(params["final_norm"], x, cfg.norm_type)
+
+
+def init_classifier(ccfg: ClassifierConfig, key: jax.Array):
+    k1, k2, k3 = jax.random.split(key, 3)
+    backbone, axes = M.init_model(ccfg.arch, k1)
+    p = {"backbone": backbone}
+    a = {"backbone": axes}
+    p["cls"], a["cls"] = init_dense(k2, ccfg.arch.d_model, ccfg.n_classes, ("embed", None))
+    p["anom"], a["anom"] = init_dense(k3, ccfg.arch.d_model, 1, ("embed", None))
+    p["fusion"] = fusion_mod.init_fusion(fusion_mod.FusionConfig())
+    a["fusion"] = {"alpha": (), "beta": ()}
+    return p, a
+
+
+def packet_signature(ccfg: ClassifierConfig, tokens: jax.Array) -> jax.Array:
+    """Presence bitmap of marker tokens → packed uint32 signature (B, W).
+
+    The dataplane equivalent: field extraction (Partition) + per-field
+    TCAM-ready bit packing.  Strictly per-flow, O(T) with SumReduce."""
+    marker = tokens - ccfg.marker_base  # (B, T); <0 for body bytes
+    n_bits = 32 * ccfg.sig_words
+    onehot = jax.nn.one_hot(jnp.clip(marker, 0, n_bits - 1), n_bits, dtype=jnp.uint32)
+    onehot = onehot * (marker >= 0)[..., None].astype(jnp.uint32)
+    bits = jnp.minimum(jnp.sum(onehot, axis=1), 1).astype(jnp.uint32)  # (B, n_bits)
+    words = bits.reshape(tokens.shape[0], ccfg.sig_words, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def classifier_forward(
+    ccfg: ClassifierConfig,
+    params,
+    rules: symbolic.RuleSet,
+    batch: Dict[str, jax.Array],
+) -> Dict[str, jax.Array]:
+    h = hidden_states(ccfg.arch, params["backbone"], batch)
+    pooled = jnp.mean(h, axis=1)  # (B, d)
+    class_logits = dense(params["cls"], pooled)
+    s_nn = dense(params["anom"], pooled)[..., 0]
+    sig = packet_signature(ccfg, batch["tokens"])
+    hits = symbolic.ternary_match(sig, rules)  # (B, M)
+    hard = symbolic.hard_hit(hits, rules)
+    s_sym = symbolic.soft_score(hits, rules)
+    trust = fusion_mod.cascade_fusion(
+        params["fusion"], s_nn, s_sym, hard, lambda_h=ccfg.lambda_h
+    )
+    return {
+        "class_logits": class_logits,
+        "s_nn": s_nn,
+        "s_sym": s_sym,
+        "hard_hit": hard,
+        "trust": trust,
+    }
+
+
+def classifier_loss(
+    ccfg: ClassifierConfig,
+    params,
+    rules: symbolic.RuleSet,
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    out = classifier_forward(ccfg, params, rules, batch)
+    logits = out["class_logits"].astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ce = jnp.mean(logz - jnp.take_along_axis(logits, labels[:, None], 1)[:, 0])
+    loss = ce
+    metrics = {"ce": ce}
+    if "anomalous" in batch:
+        y = batch["anomalous"].astype(jnp.float32)
+        # train the soft branch only (the hard branch is the deterministic
+        # veto — Eq. 15's cascade; gradients must not depend on it)
+        soft = fusion_mod.cascade_fusion(
+            params["fusion"], out["s_nn"], out["s_sym"], out["hard_hit"], lambda_h=False
+        )
+        bce = -jnp.mean(
+            y * jnp.log(soft + 1e-7) + (1 - y) * jnp.log(1 - soft + 1e-7)
+        )
+        loss = loss + bce
+        metrics["bce"] = bce
+    return loss, metrics
+
+
+def accuracy_metrics(preds: jax.Array, labels: jax.Array, n_classes: int):
+    """Macro precision / recall / F1 (paper's Table 1 metrics)."""
+    pr, rc, f1 = [], [], []
+    for c in range(n_classes):
+        tp = jnp.sum((preds == c) & (labels == c))
+        fp = jnp.sum((preds == c) & (labels != c))
+        fn = jnp.sum((preds != c) & (labels == c))
+        p = tp / jnp.maximum(tp + fp, 1)
+        r = tp / jnp.maximum(tp + fn, 1)
+        pr.append(p)
+        rc.append(r)
+        f1.append(2 * p * r / jnp.maximum(p + r, 1e-9))
+    return (
+        float(jnp.mean(jnp.stack(pr))),
+        float(jnp.mean(jnp.stack(rc))),
+        float(jnp.mean(jnp.stack(f1))),
+    )
+
+
+def default_rules(ccfg: ClassifierConfig, anomaly_tokens: jax.Array) -> symbolic.RuleSet:
+    """Hard rules matching the known-bad signature tokens; a few soft rules
+    over common marker co-occurrences (weights trained offline via HL-MRF)."""
+    n_bits = 32 * ccfg.sig_words
+    marker_bits = jnp.clip(anomaly_tokens - ccfg.marker_base, 0, n_bits - 1)
+    bits = jnp.zeros((1, n_bits), jnp.uint32).at[0, marker_bits].set(1)
+    words = bits.reshape(1, ccfg.sig_words, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    value = jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)
+    return symbolic.RuleSet(
+        values=value,
+        masks=value,  # care exactly about the anomaly marker bits
+        weights=jnp.asarray([4.0]),
+        hard=jnp.asarray([True]),
+    )

@@ -1,0 +1,121 @@
+"""Train / prefill / serve step functions (the jit roots).
+
+``make_train_step`` keeps fp32 master parameters, casts matrices to the
+config dtype for the forward/backward, and applies AdamW.  Remat policy is
+the config's; GSPMD derives all collectives from the in/out shardings the
+launcher attaches when jitting these functions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.optim.optimizer import AdamWConfig, adamw_update, init_optimizer
+
+
+def cast_for_compute(cfg: ArchConfig, params: Any) -> Any:
+    dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    if dtype == jnp.float32:
+        return params
+
+    def cast(p):
+        if p.dtype == jnp.float32 and p.ndim >= 2:
+            return p.astype(dtype)
+        return p
+
+    return jax.tree_util.tree_map(cast, params)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, grad_shardings=None):
+    """``grad_shardings`` (a params-shaped pytree of NamedSharding) pins the
+    gradient layout so SPMD emits reduce-scatters for the DP reduction
+    instead of full-tensor all-reduces (ZeRO grad sharding) — without it the
+    backward holds every FSDP parameter's full fp32 gradient per device."""
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return M.loss_fn(cfg, cast_for_compute(cfg, p), batch)
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {**metrics, **om, "loss": l}
+
+    return train_step
+
+
+def make_train_state(cfg: ArchConfig, key: jax.Array):
+    params, axes = M.init_model(cfg, key)
+    return params, init_optimizer(params), axes
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch) -> jax.Array:
+        """Returns next-token logits for the final position only — a
+        full-sequence (B, T, V) logits output at 32k context would be a
+        multi-GiB buffer per device and no serving system materializes it."""
+        logits, _ = M.forward(cfg, cast_for_compute(cfg, params), batch)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, token, position, caches):
+        logits, caches = M.decode_step(
+            cfg, cast_for_compute(cfg, params), token, position, caches
+        )
+        return logits, caches
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# Gradient-accumulation variant (elastic shrink keeps global batch constant)
+# --------------------------------------------------------------------------
+
+def make_train_step_accum(
+    cfg: ArchConfig, opt_cfg: AdamWConfig, microbatches: int, grad_shardings=None
+):
+    """Gradient accumulation over ``microbatches`` (scope "accum"): divides
+    the activation working set by the microbatch count — required for the
+    ≥100B trains — and is the elastic-shrink path's batch-preserving tool."""
+
+    def train_step(params, opt_state, batch):
+        def loss(p, mb):
+            return M.loss_fn(cfg, cast_for_compute(cfg, p), mb)
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+        mbs = jax.tree_util.tree_map(split, batch)
+
+        def body(acc, mb):
+            with jax.named_scope("accum"):
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                if grad_shardings is not None:
+                    g = jax.lax.with_sharding_constraint(g, grad_shardings)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + l), ()
+
+        def zero_like_sharded(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return z
+
+        zero_g = jax.tree_util.tree_map(zero_like_sharded, params)
+        if grad_shardings is not None:
+            zero_g = jax.lax.with_sharding_constraint(zero_g, grad_shardings)
+        (grads, total_l), _ = jax.lax.scan(body, (zero_g, jnp.zeros(())), mbs)
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {**om, "loss": total_l / microbatches}
+
+    return train_step

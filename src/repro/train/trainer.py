@@ -1,0 +1,183 @@
+"""Trainer: the production loop wiring every subsystem together.
+
+Per step: resumable data pipeline → device_put (sharded) → jitted
+train_step → metrics.  Around it: async atomic checkpointing,
+heartbeat/straggler bookkeeping, and the paper's **two-timescale protocol**
+(§3.6): the fast path maintains EMA occupancy statistics of the Chimera
+codebook inside the step; every ``t_cp_steps`` the control plane reclusters
+the codebook from a feature reservoir, gates the install on Δ_map > τ_map
+(Eq. 20) and the Δt_install < T_cp check (Eq. 18), and atomically swaps the
+tables into the parameter tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ArchConfig
+from repro.core.two_timescale import (
+    TwoTimescaleConfig,
+    TwoTimescaleController,
+    atomic_swap,
+)
+from repro.models import model as M
+from repro.optim.optimizer import AdamWConfig, adamw_update, init_optimizer
+from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
+from repro.train.train_step import cast_for_compute, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    seed: int = 0
+    two_timescale: Optional[TwoTimescaleConfig] = None
+    resume: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        arch: ArchConfig,
+        tcfg: TrainerConfig,
+        stream,
+        opt_cfg: Optional[AdamWConfig] = None,
+        loss_fn=None,  # custom (params, batch) -> (loss, metrics)
+    ):
+        self.arch = arch
+        self.tcfg = tcfg
+        self.stream = stream
+        self.opt_cfg = opt_cfg or AdamWConfig(total_steps=tcfg.total_steps)
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params, self.axes = M.init_model(arch, key)
+        self.opt_state = init_optimizer(self.params, self.opt_cfg)
+        self.step = 0
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.heartbeats = HeartbeatMonitor()
+        self.stragglers = StragglerDetector()
+        self.metrics_log: list = []
+
+        if loss_fn is None:
+            self._step_fn = jax.jit(make_train_step(arch, self.opt_cfg))
+        else:
+            def step_fn(params, opt_state, batch):
+                (l, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(cast_for_compute(arch, p), batch), has_aux=True
+                )(params)
+                new_p, new_o, om = adamw_update(self.opt_cfg, params, grads, opt_state)
+                return new_p, new_o, {**metrics, **om, "loss": l}
+
+            self._step_fn = jax.jit(step_fn)
+
+        # two-timescale controller over the Chimera codebook (when present)
+        self.controller: Optional[TwoTimescaleController] = None
+        if tcfg.two_timescale is not None:
+            n_cent = arch.chimera.feature_map.codebook_size
+            self.controller = TwoTimescaleController(tcfg.two_timescale, n_cent)
+            self._occupancy = jnp.zeros((n_cent,))
+
+        if tcfg.resume and self.ckpt.latest_step() is not None:
+            self.restore()
+
+    # ------------------------------------------------------------------
+    def restore(self) -> None:
+        tree = {"params": self.params, "opt": self.opt_state}
+        restored, extra, step = self.ckpt.restore(tree)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.step = step
+        if "data_state" in extra:
+            self.stream.restore(extra["data_state"])
+
+    def save(self, blocking: bool = False) -> None:
+        self.ckpt.save(
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            extra={"data_state": self.stream.state()},
+            blocking=blocking,
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        steps = steps or self.tcfg.total_steps
+        t_last = time.perf_counter()
+        while self.step < steps:
+            batch_np = self.stream.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch
+            )
+            self.step += 1
+            dt = time.perf_counter() - t_last
+            t_last = time.perf_counter()
+            self.heartbeats.beat(worker=0, step=self.step)
+            self.stragglers.record(worker=0, step_seconds=dt)
+            if self.controller is not None:
+                self._two_timescale_tick(batch)
+            if self.step % self.tcfg.log_every == 0:
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = self.step
+                row["step_seconds"] = dt
+                self.metrics_log.append(row)
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        self.save(blocking=True)
+        return {"step": self.step, "log": self.metrics_log}
+
+    # ------------------------------------------------------------------
+    def _two_timescale_tick(self, batch) -> None:
+        """Fast path: EMA occupancy (Eq. 17).  Slow path on epoch boundary."""
+        cfg = self.arch.chimera
+        if cfg.feature_map.kind != "codebook":
+            return
+        from repro.core.feature_maps import assign_codes, _normalize
+        from repro.core.two_timescale import ema_update, occupancy_from_codes
+
+        # locate the (shared) codebook params in layer 0's attention
+        fm_params = self._codebook_params()
+        if fm_params is None:
+            return
+        d_code = fm_params["centroids"].shape[-1]  # codebook lives in head space
+        # sample features: token embeddings of this batch folded into
+        # head-width slices (cheap proxy for the per-layer q/k features;
+        # the reservoir feeds reclustering)
+        emb = M.embed(self.params["embed"], batch["tokens"][:, :64])
+        feats = _normalize(emb.reshape(-1, d_code), cfg.feature_map.input_scale)
+        codes = assign_codes(fm_params["centroids"][0], feats)
+        occ = occupancy_from_codes(codes, self.controller.n_centroids)
+        self._occupancy = ema_update(
+            self._occupancy, occ, self.controller.cfg.eta
+        )
+        self.controller.observe(np.asarray(feats))
+        new_cent, rec = self.controller.maybe_recluster(
+            self.step,
+            fm_params["centroids"][0],
+            self._occupancy,
+            jax.random.PRNGKey(self.step),
+        )
+        if rec is not None and rec.installed:
+            stacked = jnp.broadcast_to(
+                new_cent[None], fm_params["centroids"].shape
+            )
+            fm_params["centroids"] = atomic_swap(None, stacked)
+            self._install_codebook(fm_params)
+
+    def _codebook_params(self):
+        try:
+            blocks = self.params["blocks"]
+            return dict(blocks["b0"]["attn"]["chimera"]["fm"])
+        except (KeyError, TypeError):
+            return None
+
+    def _install_codebook(self, fm_params) -> None:
+        self.params["blocks"]["b0"]["attn"]["chimera"]["fm"] = fm_params

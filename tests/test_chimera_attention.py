@@ -1,0 +1,118 @@
+"""Chimera attention integration: chunked ≡ reference ≡ decode, prefill
+state construction, expand_kv parity, hardware-budget accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chimera_attention as ca
+from repro.core.feature_maps import FeatureMapConfig
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = ca.ChimeraAttentionConfig(
+    feature_map=FeatureMapConfig(kind="exp_prf", m=32),
+    chunk_size=16,
+    n_global=8,
+    sig_bits=16,
+    match_hamming=6,
+)
+
+
+def _qkv(B=2, H=4, Hkv=2, T=64, d=16, dv=16, key=KEY):
+    ks = jax.random.split(key, 3)
+    return (
+        jax.random.normal(ks[0], (B, H, T, d)),
+        jax.random.normal(ks[1], (B, Hkv, T, d)),
+        jax.random.normal(ks[2], (B, Hkv, T, dv)),
+    )
+
+
+class TestChimeraAttention:
+    def test_chunked_matches_reference(self):
+        params = ca.init_chimera_attention(CFG, 2, 16, 16, KEY)
+        q, k, v = _qkv()
+        out = ca.chimera_attention(CFG, params, q, k, v)
+        ref = ca.reference_attention(CFG, params, q, k, v)
+        np.testing.assert_allclose(out, ref, atol=2e-5)
+
+    @pytest.mark.parametrize("use_local,use_stream,n_global", [
+        (True, False, 0), (False, True, 0), (True, True, 8),
+    ])
+    def test_ablations_match_reference(self, use_local, use_stream, n_global):
+        cfg = dataclasses.replace(
+            CFG, use_local=use_local, use_stream=use_stream, n_global=n_global
+        )
+        params = ca.init_chimera_attention(cfg, 2, 16, 16, KEY)
+        q, k, v = _qkv()
+        out = ca.chimera_attention(cfg, params, q, k, v)
+        ref = ca.reference_attention(cfg, params, q, k, v)
+        np.testing.assert_allclose(out, ref, atol=2e-5)
+
+    def test_decode_matches_train_path(self):
+        params = ca.init_chimera_attention(CFG, 2, 16, 16, KEY)
+        q, k, v = _qkv()
+        out = ca.chimera_attention(CFG, params, q, k, v)
+        state = ca.init_decode_state(CFG, 2, 2, 16, 16)
+        for t in range(64):
+            o, state = ca.chimera_decode_step(
+                CFG, params, q[:, :, t], k[:, :, t], v[:, :, t], state
+            )
+            np.testing.assert_allclose(o, out[:, :, t], atol=2e-5)
+
+    def test_prefill_state_continues_decode(self):
+        """prefill_into_state(prompt) + decode(next) ≡ full-sequence decode."""
+        params = ca.init_chimera_attention(CFG, 2, 16, 16, KEY)
+        q, k, v = _qkv(T=48)
+        Tp = 40  # prompt length (not a chunk multiple: tail fills the ring)
+        state = ca.prefill_into_state(CFG, params, k[:, :, :Tp], v[:, :, :Tp])
+        ref_state = ca.init_decode_state(CFG, 2, 2, 16, 16)
+        for t in range(Tp):
+            _, ref_state = ca.chimera_decode_step(
+                CFG, params, q[:, :, t], k[:, :, t], v[:, :, t], ref_state
+            )
+        o1, _ = ca.chimera_decode_step(
+            CFG, params, q[:, :, Tp], k[:, :, Tp], v[:, :, Tp], state
+        )
+        o2, _ = ca.chimera_decode_step(
+            CFG, params, q[:, :, Tp], k[:, :, Tp], v[:, :, Tp], ref_state
+        )
+        np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+    def test_expand_kv_changes_nothing_numerically(self):
+        """expand_kv repeats KV per query head — outputs must be identical
+        (it's a sharding-layout decision, not a modelling change)."""
+        cfg_exp = dataclasses.replace(CFG, expand_kv=True)
+        params = ca.init_chimera_attention(CFG, 2, 16, 16, KEY)
+        q, k, v = _qkv()
+        out = ca.chimera_attention(CFG, params, q, k, v)
+        out_exp = ca.chimera_attention(cfg_exp, params, q, k, v)
+        np.testing.assert_allclose(out, out_exp, atol=2e-5)
+
+    def test_bounded_state_size(self):
+        """Decode state is independent of context length (the paper's
+        per-flow bound): feeding 4x more tokens leaves state shapes fixed."""
+        params = ca.init_chimera_attention(CFG, 1, 16, 16, KEY)
+        q, k, v = _qkv(B=1, H=2, Hkv=1, T=128)
+        state = ca.init_decode_state(CFG, 1, 1, 16, 16)
+        shapes0 = jax.tree_util.tree_map(lambda x: x.shape, state)
+        for t in range(128):
+            _, state = ca.chimera_decode_step(
+                CFG, params, q[:, :, t], k[:, :, t], v[:, :, t], state
+            )
+        shapes1 = jax.tree_util.tree_map(lambda x: x.shape, state)
+        assert shapes0 == shapes1
+
+    def test_pallas_path_matches_jnp_path(self):
+        cfg_pl = dataclasses.replace(CFG, use_pallas=True, chunk_size=16)
+        params = ca.init_chimera_attention(CFG, 2, 16, 16, KEY)
+        q, k, v = _qkv()
+        out_jnp = ca.chimera_attention(CFG, params, q, k, v)
+        out_pl = ca.chimera_attention(cfg_pl, params, q, k, v)
+        np.testing.assert_allclose(out_pl, out_jnp, atol=2e-4, rtol=2e-4)
+
+    def test_state_scalars_budget(self):
+        assert CFG.state_scalars(16, 16) == 16 * 32 + 32 * 17

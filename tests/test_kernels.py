@@ -1,0 +1,154 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.chimera_attention.kernel import chimera_attention_pallas
+from repro.kernels.chimera_attention.ref import chimera_attention_partials_ref
+from repro.kernels.decode_step.kernel import decode_step_pallas
+from repro.kernels.decode_step.ref import decode_step_ref
+from repro.kernels.window_attention.kernel import window_attention_pallas
+from repro.kernels.window_attention.ref import window_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    # fp32 tolerance allows for accumulation-order differences between the
+    # kernel's running-state schedule and the reference einsums
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=5e-4, rtol=5e-4)
+
+
+class TestChimeraKernel:
+    @pytest.mark.parametrize("B,Hkv,Gq,T,d,m,dv,L", [
+        (1, 1, 1, 128, 16, 32, 16, 64),
+        (2, 2, 2, 256, 32, 64, 32, 64),
+        (1, 3, 1, 192, 8, 16, 24, 64),   # non-pow2 heads/dims
+        (2, 1, 4, 128, 64, 128, 64, 128),
+    ])
+    def test_matches_ref(self, B, Hkv, Gq, T, d, m, dv, L):
+        ksplit = jax.random.split(KEY, 5)
+        q = jax.random.normal(ksplit[0], (B, Hkv, Gq, T, d))
+        k = jax.random.normal(ksplit[1], (B, Hkv, T, d))
+        v = jax.random.normal(ksplit[2], (B, Hkv, T, dv))
+        pq = jax.nn.elu(jax.random.normal(ksplit[3], (B, Hkv, Gq, T, m))) + 1
+        pk = jax.nn.elu(jax.random.normal(ksplit[4], (B, Hkv, T, m))) + 1
+        num, den = chimera_attention_pallas(
+            q.reshape(B * Hkv, Gq, T, d), k.reshape(B * Hkv, T, d),
+            v.reshape(B * Hkv, T, dv), pq.reshape(B * Hkv, Gq, T, m),
+            pk.reshape(B * Hkv, T, m), chunk_size=L, interpret=True,
+        )
+        rnum, rden = chimera_attention_partials_ref(q, k, v, pq, pk, L)
+        np.testing.assert_allclose(
+            num.reshape(B, Hkv, Gq, T, dv), rnum, **_tol(jnp.float32))
+        np.testing.assert_allclose(
+            den.reshape(B, Hkv, Gq, T), rden, **_tol(jnp.float32))
+
+    @pytest.mark.parametrize("use_local,use_stream", [(True, False), (False, True)])
+    def test_ablation_paths(self, use_local, use_stream):
+        B, Hkv, Gq, T, d, m, dv, L = 1, 2, 1, 128, 16, 32, 16, 64
+        ksplit = jax.random.split(KEY, 5)
+        q = jax.random.normal(ksplit[0], (B, Hkv, Gq, T, d))
+        k = jax.random.normal(ksplit[1], (B, Hkv, T, d))
+        v = jax.random.normal(ksplit[2], (B, Hkv, T, dv))
+        pq = jax.nn.relu(jax.random.normal(ksplit[3], (B, Hkv, Gq, T, m))) + 0.1
+        pk = jax.nn.relu(jax.random.normal(ksplit[4], (B, Hkv, T, m))) + 0.1
+        num, den = chimera_attention_pallas(
+            q.reshape(B * Hkv, Gq, T, d), k.reshape(B * Hkv, T, d),
+            v.reshape(B * Hkv, T, dv), pq.reshape(B * Hkv, Gq, T, m),
+            pk.reshape(B * Hkv, T, m), chunk_size=L, interpret=True,
+            use_local=use_local, use_stream=use_stream,
+        )
+        rnum, rden = chimera_attention_partials_ref(
+            q, k, v, pq, pk, L, use_local=use_local, use_stream=use_stream)
+        np.testing.assert_allclose(num.reshape(B, Hkv, Gq, T, dv), rnum, atol=2e-4)
+        np.testing.assert_allclose(den.reshape(B, Hkv, Gq, T), rden, atol=2e-4)
+
+    def test_bf16_inputs(self):
+        B, Hkv, Gq, T, d, m, dv, L = 1, 1, 1, 128, 16, 32, 16, 64
+        ksplit = jax.random.split(KEY, 5)
+        q = jax.random.normal(ksplit[0], (B, Hkv, Gq, T, d), jnp.bfloat16)
+        k = jax.random.normal(ksplit[1], (B, Hkv, T, d), jnp.bfloat16)
+        v = jax.random.normal(ksplit[2], (B, Hkv, T, dv), jnp.bfloat16)
+        pq = (jax.nn.elu(jax.random.normal(ksplit[3], (B, Hkv, Gq, T, m))) + 1).astype(jnp.bfloat16)
+        pk = (jax.nn.elu(jax.random.normal(ksplit[4], (B, Hkv, T, m))) + 1).astype(jnp.bfloat16)
+        num, den = chimera_attention_pallas(
+            q.reshape(B * Hkv, Gq, T, d), k.reshape(B * Hkv, T, d),
+            v.reshape(B * Hkv, T, dv), pq.reshape(B * Hkv, Gq, T, m),
+            pk.reshape(B * Hkv, T, m), chunk_size=L, interpret=True)
+        rnum, rden = chimera_attention_partials_ref(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            pq.astype(jnp.float32), pk.astype(jnp.float32), L)
+        np.testing.assert_allclose(
+            num.reshape(B, Hkv, Gq, T, dv).astype(jnp.float32), rnum, **_tol(jnp.bfloat16))
+
+
+class TestWindowKernel:
+    @pytest.mark.parametrize("T,W,blk", [
+        (256, 64, 64), (256, 128, 64), (512, 256, 128), (384, 128, 128),
+    ])
+    def test_matches_ref(self, T, W, blk):
+        BH, d = 3, 32
+        ksplit = jax.random.split(KEY, 3)
+        q = jax.random.normal(ksplit[0], (BH, T, d))
+        k = jax.random.normal(ksplit[1], (BH, T, d))
+        v = jax.random.normal(ksplit[2], (BH, T, d))
+        out = window_attention_pallas(q, k, v, window=W, blk_q=blk, blk_k=blk, interpret=True)
+        ref = window_attention_ref(q, k, v, W)
+        np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
+
+    def test_window_equals_full_when_covering(self):
+        BH, T, d = 2, 128, 16
+        ksplit = jax.random.split(KEY, 3)
+        q, k, v = (jax.random.normal(ksplit[i], (BH, T, d)) for i in range(3))
+        out = window_attention_pallas(q, k, v, window=128, blk_q=64, blk_k=64, interpret=True)
+        ref = window_attention_ref(q, k, v, T)
+        np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
+
+
+class TestDecodeKernel:
+    @pytest.mark.parametrize("count", [0, 3, 7])
+    @pytest.mark.parametrize("BH,Gq,L,d,m,dv", [(4, 2, 8, 16, 32, 16), (2, 1, 16, 8, 16, 8)])
+    def test_matches_ref(self, count, BH, Gq, L, d, m, dv):
+        ksplit = jax.random.split(KEY, 9)
+        q = jax.random.normal(ksplit[0], (BH, Gq, d))
+        kt = jax.random.normal(ksplit[1], (BH, d))
+        vt = jax.random.normal(ksplit[2], (BH, dv))
+        pq = jax.nn.elu(jax.random.normal(ksplit[3], (BH, Gq, m))) + 1
+        kbuf = jax.random.normal(ksplit[4], (BH, L, d))
+        vbuf = jax.random.normal(ksplit[5], (BH, L, dv))
+        S = jax.random.normal(ksplit[6], (BH, m, dv))
+        Z = jax.nn.relu(jax.random.normal(ksplit[7], (BH, m))) + 1
+        cnt = jnp.full((BH,), count, jnp.int32)
+        kbuf_w = kbuf.at[:, count].set(kt)
+        pbuf = jax.nn.elu(kbuf_w @ jax.random.normal(ksplit[8], (d, m)) * 0.2) + 1
+        out, (S2, Z2, kb2, vb2, c2) = decode_step_pallas(
+            q, kt, vt, pq, pbuf, kbuf, vbuf, S, Z, cnt, chunk_size=L, interpret=True)
+        rout, (rS, rZ, rkb, rvb, rc) = decode_step_ref(
+            q, kt, vt, pq, pbuf, kbuf, vbuf, S, Z, jnp.asarray(count), L)
+        np.testing.assert_allclose(out, rout, atol=1e-5)
+        np.testing.assert_allclose(S2, rS, atol=1e-5)
+        np.testing.assert_allclose(Z2, rZ, atol=1e-5)
+        np.testing.assert_allclose(kb2, rkb, atol=1e-6)
+        assert int(c2[0]) == int(rc)
+
+    def test_fold_on_full_clears_buffer(self):
+        BH, Gq, L, d, m, dv = 2, 1, 4, 8, 16, 8
+        ksplit = jax.random.split(KEY, 9)
+        q = jax.random.normal(ksplit[0], (BH, Gq, d))
+        kt = jax.random.normal(ksplit[1], (BH, d))
+        vt = jax.random.normal(ksplit[2], (BH, dv))
+        pq = jax.nn.elu(jax.random.normal(ksplit[3], (BH, Gq, m))) + 1
+        kbuf = jax.random.normal(ksplit[4], (BH, L, d))
+        vbuf = jax.random.normal(ksplit[5], (BH, L, dv))
+        S = jnp.zeros((BH, m, dv))
+        Z = jnp.zeros((BH, m))
+        pbuf = jax.nn.elu(kbuf.at[:, L - 1].set(kt) @ jnp.ones((d, m)) * 0.1) + 1
+        out, (S2, Z2, kb2, vb2, c2) = decode_step_pallas(
+            q, kt, vt, pq, pbuf, kbuf, vbuf, S, Z,
+            jnp.full((BH,), L - 1, jnp.int32), chunk_size=L, interpret=True)
+        assert int(c2[0]) == 0
+        assert float(jnp.abs(kb2).sum()) == 0.0
+        assert float(jnp.abs(S2).sum()) > 0.0  # folded mass landed in S

@@ -1,0 +1,111 @@
+"""Assignment-required smoke tests: one reduced same-family config per
+assigned architecture; forward + one train step on CPU; output shapes and
+no-NaN assertions.  Full configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models import model as M
+from repro.optim.optimizer import AdamWConfig
+from repro.train.train_step import make_train_step, make_train_state
+
+KEY = jax.random.PRNGKey(0)
+ALL_ARCHS = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def batch_for():
+    def f(cfg, B=2, T=32):
+        tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        if cfg.encoder_layers:
+            batch["enc_embeds"] = jax.random.normal(KEY, (B, T, cfg.d_model))
+        return batch
+
+    return f
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_and_finite(arch, batch_for):
+    cfg = smoke_config(arch)
+    params, axes = M.init_model(cfg, KEY)
+    batch = batch_for(cfg)
+    logits, aux = M.forward(cfg, params, batch)
+    B, T = batch["tokens"].shape
+    assert logits.shape == (B, T, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux loss"
+    # axes tree mirrors params tree
+    assert jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda _: 0, params)
+    ) == jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda _: 0, axes, is_leaf=M._is_axes_leaf)
+    )
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step_decreases_nothing_nan(arch, batch_for):
+    cfg = smoke_config(arch)
+    params, opt_state, _ = make_train_state(cfg, KEY)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1)))
+    batch = batch_for(cfg)
+    l0 = None
+    for _ in range(3):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: NaN loss"
+        l0 = l0 or float(metrics["loss"])
+    assert float(metrics["loss"]) < l0 + 0.5  # no blow-up over repeated steps
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["codeqwen1.5-7b", "minicpm3-4b", "mixtral-8x7b", "xlstm-125m",
+     "jamba-1.5-large-398b", "whisper-tiny"],
+)
+def test_smoke_decode_matches_forward(arch, batch_for):
+    cfg = smoke_config(arch)
+    params, _ = M.init_model(cfg, KEY)
+    B, T = 2, 32
+    batch = batch_for(cfg, B, T)
+    logits, _ = M.forward(cfg, params, batch)
+    if cfg.encoder_layers:
+        caches = M.init_encdec_caches(cfg, params, batch["enc_embeds"], B, T)
+    else:
+        caches = M.init_caches(cfg, B, T)
+    step = jax.jit(lambda tok, pos, c: M.decode_step(cfg, params, tok, pos, c))
+    tokens = batch["tokens"]
+    worst = 0.0
+    for t in range(T):
+        lg, caches = step(tokens[:, t], jnp.full((B,), t, jnp.int32), caches)
+        worst = max(worst, float(jnp.max(jnp.abs(lg - logits[:, t]))))
+    assert worst < 1e-3, f"{arch}: decode diverges from forward by {worst}"
+
+
+def test_full_configs_param_counts_sane():
+    """Sanity of the published configurations (order-of-magnitude check)."""
+    expected = {
+        "codeqwen1.5-7b": (6e9, 9.5e9),
+        "yi-9b": (8e9, 10e9),
+        "minicpm3-4b": (3.3e9, 5.5e9),
+        "qwen3-32b": (30e9, 36e9),
+        "whisper-tiny": (3e7, 9e7),
+        "chameleon-34b": (32e9, 38e9),
+        # the brief fixes 48L×64e×1408: ~29B total (the official "16B" model
+        # has 27 layers; we implement the assignment's numbers verbatim)
+        "moonshot-v1-16b-a3b": (25e9, 32e9),
+        "mixtral-8x7b": (44e9, 50e9),
+        "xlstm-125m": (1.0e8, 2.2e8),
+        "jamba-1.5-large-398b": (3.6e11, 4.4e11),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.active_param_count() < cfg.param_count()
+    ratio = cfg.active_param_count() / cfg.param_count()
+    assert 0.2 < ratio < 0.5  # top-2 of 8 experts + attention

@@ -1,0 +1,162 @@
+"""Trustworthiness properties (hypothesis) and fixed-point quantization:
+fusion hard-veto invariant (Eq. 15), symbolic TCAM semantics, HL-MRF
+training, quantization error/overflow bounds (Thm A.3, Eq. 38-39)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fusion as fu
+from repro.core import symbolic as sym
+from repro.core.quantization import (
+    FixedPointSpec,
+    check_overflow,
+    dequantize,
+    overflow_safe_horizon,
+    quantize,
+    quantization_error_bound,
+    quantize_per_channel,
+)
+
+KEY = jax.random.PRNGKey(0)
+PARAMS = fu.init_fusion(fu.FusionConfig())
+
+
+class TestFusionTrustProperty:
+    @settings(max_examples=100, deadline=None)
+    @given(
+        s_nn=st.floats(-1e6, 1e6, allow_nan=False),
+        s_sym=st.floats(-100, 100, allow_nan=False),
+        hard=st.booleans(),
+    )
+    def test_hard_veto_dominates_any_neural_evidence(self, s_nn, s_sym, hard):
+        """The paper's trust guarantee: 𝕀_sym ∧ λ_h ⇒ S = 1, regardless of
+        the neural score — even adversarially extreme ones."""
+        out = fu.cascade_fusion(
+            PARAMS, jnp.asarray(s_nn), jnp.asarray(s_sym), jnp.asarray(hard)
+        )
+        if hard:
+            assert float(out) == 1.0
+        else:
+            assert 0.0 <= float(out) <= 1.0
+
+    def test_soft_blend_is_sigmoid(self):
+        out = fu.cascade_fusion(
+            PARAMS, jnp.asarray(0.3), jnp.asarray(-0.1), jnp.asarray(False)
+        )
+        expected = jax.nn.sigmoid(0.3 - 0.1)
+        np.testing.assert_allclose(out, expected, rtol=1e-6)
+
+    def test_no_gradient_through_hard_branch(self):
+        g = jax.grad(
+            lambda s: fu.cascade_fusion(PARAMS, s, jnp.asarray(0.0), jnp.asarray(True)).sum()
+        )(jnp.asarray(5.0))
+        assert float(g) == 0.0
+
+    def test_trustworthy_predicate(self):
+        s_nn = jnp.asarray([-100.0, 0.0, 100.0])
+        hard = jnp.asarray([True, True, True])
+        ok = fu.fusion_is_trustworthy(PARAMS, s_nn, jnp.zeros(3), hard)
+        assert bool(jnp.all(ok))
+
+
+class TestSymbolic:
+    def test_pack_bits_roundtrip_vs_numpy(self):
+        bits = jax.random.bernoulli(KEY, 0.5, (7, 64)).astype(jnp.int32)
+        packed = sym.pack_bits(bits)
+        ref = np.packbits(
+            np.asarray(bits).astype(np.uint8), axis=-1, bitorder="little"
+        ).view(np.uint32) if False else None
+        # manual check: bit j of word w == bits[..., 32w + j]
+        for w in range(2):
+            for j in (0, 5, 31):
+                expect = np.asarray(bits)[:, 32 * w + j]
+                got = (np.asarray(packed)[:, w] >> j) & 1
+                np.testing.assert_array_equal(got, expect)
+
+    def test_ternary_match_semantics(self):
+        """TCAM: hit ⇔ (sig & mask) == (value & mask)."""
+        values = jnp.asarray([[0b1010], [0b1111]], jnp.uint32)
+        masks = jnp.asarray([[0b1110], [0b0011]], jnp.uint32)
+        rules = sym.RuleSet(values, masks, jnp.ones(2), jnp.asarray([True, False]))
+        sig = jnp.asarray([[0b1011], [0b0111], [0b0011]], jnp.uint32)
+        hits = sym.ternary_match(sig, rules)
+        # rule0 cares about bits 1-3 == 101x: sig 1011 ✓, 0111 ✗, 0011 ✗
+        np.testing.assert_array_equal(np.asarray(hits[:, 0]), [True, False, False])
+        # rule1 cares about bits 0-1 == 11: 1011 ✓, 0111 ✓, 0011 ✓
+        np.testing.assert_array_equal(np.asarray(hits[:, 1]), [True, True, True])
+        assert bool(sym.hard_hit(hits, rules)[0])
+        assert not bool(sym.hard_hit(hits, rules)[1])
+
+    def test_hlmrf_training_learns_informative_rule(self):
+        """Offline HL-MRF (Eq. 16): the weight of a predictive rule grows
+        above that of a noise rule."""
+        n = jax.random.normal(KEY, (512, 4))
+        x = jax.nn.sigmoid(n)
+        y = (x[:, 0] > 0.5).astype(jnp.float32)
+        bodies_a = jnp.asarray([[2.0, 0, 0, 0], [0, 0, 0, 2.0]])
+        bodies_b = jnp.asarray([-0.5, -0.5])
+        w = sym.train_hlmrf_weights(x, y, bodies_a, bodies_b, steps=200)
+        assert float(w[0]) > float(w[1])
+        assert float(w[0]) > 0.1
+
+    def test_table_compile_respects_budget(self):
+        w = jnp.linspace(0, 3, 16)
+        spec = FixedPointSpec(bits=8)
+        table, qspec = sym.compile_weights_to_table(w, spec, budget_bits=16 * 8)
+        back = sym.decompile_table(table, qspec)
+        np.testing.assert_allclose(back, w, atol=qspec.scale)
+        with pytest.raises(ValueError):
+            sym.compile_weights_to_table(w, spec, budget_bits=8)
+
+
+class TestQuantization:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        bits=st.sampled_from([8, 16]),
+        scale=st.floats(1e-3, 10.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_roundtrip_error_bounded_by_eta_q(self, bits, scale, seed):
+        spec = FixedPointSpec(bits=bits, scale=scale)
+        x = jax.random.uniform(
+            jax.random.PRNGKey(seed), (64,),
+            minval=-spec.max_int * scale * 0.9, maxval=spec.max_int * scale * 0.9,
+        )
+        err = jnp.abs(dequantize(quantize(x, spec), spec) - x)
+        # η_q plus fp32 representation slack on x/scale (relative 2⁻²³)
+        bound = spec.eta_q + jnp.abs(x) * 2e-7 + 1e-9
+        assert bool(jnp.all(err <= bound))
+
+    def test_overflow_horizon_eq39(self):
+        spec = FixedPointSpec(bits=16, scale=0.01)
+        T = overflow_safe_horizon(B_phi=2.0, R_v=1.5, spec=spec)
+        # worst-case per-step increment in ints: B·R/scale + rounding
+        assert (T * (2.0 * 1.5 / 0.01 + 0.5)) <= spec.max_int
+        assert check_overflow(T, 2.0, 1.5, spec)
+        assert not check_overflow(T + 1, 2.0, 1.5, spec)
+
+    def test_error_bound_matches_thmA3_structure(self):
+        spec = FixedPointSpec(bits=16, scale=0.01)
+        b1 = quantization_error_bound(10, 2.0, 1.5, spec, m=4, d_v=4)
+        b2 = quantization_error_bound(20, 2.0, 1.5, spec, m=4, d_v=4)
+        np.testing.assert_allclose(b2, 2 * b1, rtol=1e-6)  # linear in T
+
+    def test_per_channel_quant(self):
+        x = jax.random.normal(KEY, (8, 16)) * jnp.arange(1, 17)
+        qt = quantize_per_channel(x, bits=8, axis=0)
+        abs_err = jnp.abs(qt.dequantize() - x)
+        assert float(jnp.max(abs_err / qt.scale)) <= 0.5 + 1e-3  # half-LSB
+        rel = abs_err / (jnp.abs(x) + 1e-6)
+        assert float(jnp.mean(rel)) < 0.05
+
+    def test_paper_eq8_example(self):
+        """Eq. 8: m=256, d_v=64, 16-bit ⇒ 262,144 bits ≈ 32 KB > 1 KB budget."""
+        from repro.core.hardware_model import aggregated_state_bits, fits_per_flow
+
+        bits = aggregated_state_bits(256, 64, 16)
+        assert bits == 262_144
+        assert not fits_per_flow(256, 64, 16)
+        assert fits_per_flow(16, 8, 8)  # a compliant configuration exists
