@@ -1,8 +1,11 @@
 """Kernel & serving micro-benchmarks (Figures 7/8 analogues).
 
-Wall times are CPU-reference numbers (interpret-mode Pallas / XLA-CPU jnp);
-the TPU projection columns come from the roofline model.  CSV:
-name,us_per_call,derived.
+All kernel invocations go through the dispatch registry
+(:mod:`repro.kernels.dispatch`), timing each family on every backend that
+runs on this host.  ``tile_sweep`` prints the autotuner's tile-sweep table
+and populates the on-disk autotune cache.  Wall times are CPU-reference
+numbers (interpret-mode Pallas / XLA-CPU jnp); the TPU projection columns
+come from the roofline model.  CSV: name,us_per_call,derived.
 """
 
 from __future__ import annotations
@@ -15,59 +18,32 @@ import numpy as np
 
 from benchmarks.common import csv_row, timeit_us, tiny_backbone
 from repro.core.hardware_model import DEFAULT_TPU
+from repro.kernels import autotune, dispatch
 
 KEY = jax.random.PRNGKey(0)
 
+# backends benchmarkable on this host ("pallas-tpu" needs TPU hardware)
+_HOST_BACKENDS = (
+    ("pallas-tpu", "pallas-interpret", "reference")
+    if jax.default_backend() == "tpu"
+    else ("pallas-interpret", "reference")
+)
 
-def kernel_benchmarks() -> List[str]:
-    rows = []
-    B, Hkv, Gq, T, d, m, dv, L = 1, 2, 1, 512, 32, 64, 32, 128
+
+def _chimera_args(B=1, Hkv=2, Gq=1, T=512, d=32, m=64, dv=32):
     ks = jax.random.split(KEY, 5)
-    q = jax.random.normal(ks[0], (B * Hkv, Gq, T, d))
-    k = jax.random.normal(ks[1], (B * Hkv, T, d))
-    v = jax.random.normal(ks[2], (B * Hkv, T, dv))
-    pq = jax.nn.elu(jax.random.normal(ks[3], (B * Hkv, Gq, T, m))) + 1
-    pk = jax.nn.elu(jax.random.normal(ks[4], (B * Hkv, T, m))) + 1
-
-    from repro.kernels.chimera_attention.kernel import chimera_attention_pallas
-    from repro.kernels.chimera_attention.ref import chimera_attention_partials_ref
-
-    fn_pl = jax.jit(lambda *a: chimera_attention_pallas(*a, chunk_size=L, interpret=True))
-    fn_ref = jax.jit(
-        lambda q5, k4, v4, pq5, pk4: chimera_attention_partials_ref(
-            q5, k4, v4, pq5, pk4, L
-        )
+    return (
+        jax.random.normal(ks[0], (B, Hkv, Gq, T, d)),
+        jax.random.normal(ks[1], (B, Hkv, T, d)),
+        jax.random.normal(ks[2], (B, Hkv, T, dv)),
+        jax.nn.elu(jax.random.normal(ks[3], (B, Hkv, Gq, T, m))) + 1,
+        jax.nn.elu(jax.random.normal(ks[4], (B, Hkv, T, m))) + 1,
     )
-    us_pl = timeit_us(fn_pl, q, k, v, pq, pk, iters=5)
-    us_ref = timeit_us(
-        fn_ref,
-        q.reshape(B, Hkv, Gq, T, d), k.reshape(B, Hkv, T, d),
-        v.reshape(B, Hkv, T, dv), pq.reshape(B, Hkv, Gq, T, m),
-        pk.reshape(B, Hkv, T, m), iters=5,
-    )
-    flops = 2 * T * L * (d + dv) + 2 * T * m * dv  # per head, approx
-    rows.append(csv_row("kernel/chimera_attention/pallas-interp", us_pl,
-                        f"T={T};L={L};ref_us={us_ref:.0f}"))
-    # TPU projection: VMEM-resident chunk kernel is compute-bound
-    proj_us = flops * B * Hkv / DEFAULT_TPU.peak_flops_bf16 * 1e6
-    rows.append(csv_row("kernel/chimera_attention/tpu-projected", proj_us,
-                        f"roofline=compute-bound"))
 
-    from repro.kernels.window_attention.kernel import window_attention_pallas
-    from repro.kernels.window_attention.ref import window_attention_ref
 
-    fn_w = jax.jit(lambda *a: window_attention_pallas(
-        *a, window=128, blk_q=128, blk_k=128, interpret=True))
-    us_w = timeit_us(fn_w, k, k, v, iters=5)
-    us_wref = timeit_us(jax.jit(lambda *a: window_attention_ref(*a, 128)), k, k, v, iters=5)
-    rows.append(csv_row("kernel/window_attention/pallas-interp", us_w,
-                        f"W=128;ref_us={us_wref:.0f}"))
-
-    from repro.kernels.decode_step.kernel import decode_step_pallas
-
-    BH = 8
+def _decode_args(BH=8, Gq=1, L=128, d=32, m=64, dv=32):
     ks2 = jax.random.split(KEY, 9)
-    args = (
+    return (
         jax.random.normal(ks2[0], (BH, Gq, d)),
         jax.random.normal(ks2[1], (BH, d)),
         jax.random.normal(ks2[2], (BH, dv)),
@@ -79,15 +55,107 @@ def kernel_benchmarks() -> List[str]:
         jax.nn.relu(jax.random.normal(ks2[8], (BH, m))) + 1,
         jnp.zeros((BH,), jnp.int32),
     )
-    fn_d = jax.jit(lambda *a: decode_step_pallas(*a, chunk_size=L, interpret=True))
-    us_d = timeit_us(fn_d, *args, iters=5)
+
+
+def kernel_benchmarks() -> List[str]:
+    rows = []
+    B, Hkv, Gq, T, d, m, dv, L = 1, 2, 1, 512, 32, 64, 32, 128
+    q, k, v, pq, pk = _chimera_args(B, Hkv, Gq, T, d, m, dv)
+
+    for backend in _HOST_BACKENDS:
+        impl = dispatch.resolve("chimera_attention", backend)
+        fn = jax.jit(lambda *a, _i=impl: _i(*a, chunk_size=L))
+        us = timeit_us(fn, q, k, v, pq, pk, iters=5)
+        rows.append(csv_row(f"kernel/chimera_attention/{backend}", us,
+                            f"T={T};L={L}"))
+    flops = 2 * T * L * (d + dv) + 2 * T * m * dv  # per head, approx
+    # TPU projection: VMEM-resident chunk kernel is compute-bound
+    proj_us = flops * B * Hkv / DEFAULT_TPU.peak_flops_bf16 * 1e6
+    rows.append(csv_row("kernel/chimera_attention/tpu-projected", proj_us,
+                        "roofline=compute-bound"))
+
+    kw = k.reshape(B * Hkv, T, d)
+    vw = v.reshape(B * Hkv, T, dv)
+    for backend in _HOST_BACKENDS:
+        impl = dispatch.resolve("window_attention", backend)
+        fn = jax.jit(lambda *a, _i=impl: _i(*a, window=128, blk_q=128, blk_k=128))
+        us = timeit_us(fn, kw, kw, vw, iters=5)
+        rows.append(csv_row(f"kernel/window_attention/{backend}", us, "W=128"))
+
+    BH = 8
+    args = _decode_args(BH, Gq, L, d, m, dv)
+    for backend in _HOST_BACKENDS:
+        impl = dispatch.resolve("decode_step", backend)
+        fn = jax.jit(lambda *a, _i=impl: _i(*a, chunk_size=L))
+        us = timeit_us(fn, *args, iters=5)
+        rows.append(csv_row(f"kernel/decode_step/{backend}", us, f"flows={BH}"))
     state_bytes = BH * (L * (d + dv) + m * (dv + 1)) * 4
-    rows.append(csv_row("kernel/decode_step/pallas-interp", us_d,
-                        f"flows={BH};state_bytes={state_bytes}"))
     # dataplane-analogue projection: the decode step touches only the
     # bounded state -> memory-bound at HBM speed on TPU
     proj = state_bytes / DEFAULT_TPU.hbm_bandwidth * 1e6
-    rows.append(csv_row("kernel/decode_step/tpu-projected", proj, "roofline=memory-bound"))
+    rows.append(csv_row("kernel/decode_step/tpu-projected", proj,
+                        f"roofline=memory-bound;state_bytes={state_bytes}"))
+    return rows
+
+
+def tile_sweep() -> List[str]:
+    """Autotuner tile-sweep table: every Eq. 11-admissible tile per family,
+    timed on this host's kernel backend; winners populate the on-disk
+    autotune cache so subsequent dispatch calls pick them up."""
+    backend = dispatch.resolve_backend("auto")
+    cache = autotune.AutotuneCache()
+    rows = []
+
+    B, Hkv, Gq, T, d, m, dv = 1, 2, 1, 256, 32, 64, 32
+    q, k, v, pq, pk = _chimera_args(B, Hkv, Gq, T, d, m, dv)
+    impl = dispatch.resolve("chimera_attention", backend)
+    dims = {"T": T, "d": d, "dv": dv, "m": m, "gq": Gq}
+
+    def make_chimera(tiles):
+        fn = jax.jit(lambda *a: impl(*a, chunk_size=tiles["chunk_size"]))
+        return lambda: fn(q, k, v, pq, pk)
+
+    for tiles, us in autotune.sweep(
+        "chimera_attention", dims, make_chimera, backend, cache=cache
+    ):
+        rows.append(csv_row(
+            f"autotune/chimera_attention/L={tiles['chunk_size']}", us,
+            f"backend={backend};vmem_kb="
+            f"{autotune.vmem_bytes('chimera_attention', tiles, dims) // 1024}"))
+
+    W = 128
+    kw = k.reshape(B * Hkv, T, d)
+    vw = v.reshape(B * Hkv, T, dv)
+    wimpl = dispatch.resolve("window_attention", backend)
+    wdims = {"T": T, "d": d, "dv": dv, "window": W}
+
+    def make_window(tiles):
+        fn = jax.jit(lambda *a: wimpl(*a, window=W, **tiles))
+        return lambda: fn(kw, kw, vw)
+
+    for tiles, us in autotune.sweep(
+        "window_attention", wdims, make_window, backend, cache=cache
+    ):
+        rows.append(csv_row(
+            f"autotune/window_attention/bq={tiles['blk_q']},bk={tiles['blk_k']}",
+            us, f"backend={backend};W={W}"))
+
+    ddims = {"d": d, "dv": dv, "m": m, "gq": Gq}
+    dimpl = dispatch.resolve("decode_step", backend)
+
+    def make_decode(tiles):
+        L = tiles["chunk_size"]
+        args = _decode_args(8, Gq, L, d, m, dv)
+        fn = jax.jit(lambda *a: dimpl(*a, chunk_size=L))
+        return lambda: fn(*args)
+
+    for tiles, us in autotune.sweep(
+        "decode_step", ddims, make_decode, backend, cache=cache
+    ):
+        rows.append(csv_row(
+            f"autotune/decode_step/L={tiles['chunk_size']}", us,
+            f"backend={backend}"))
+    rows.append(csv_row("autotune/cache", len(cache), f"path={cache.path}"))
     return rows
 
 

@@ -33,6 +33,7 @@ def main() -> None:
         "table5": lambda: tables.table5_stability(total_steps=60 if args.fast else 120),
         "anomaly": lambda: tables.anomaly_auc(steps=max(30, steps)),
         "kernels": kernels_bench.kernel_benchmarks,
+        "tilesweep": kernels_bench.tile_sweep,
         "serving": kernels_bench.serving_benchmarks,
     }
     if args.only:

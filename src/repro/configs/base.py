@@ -35,6 +35,11 @@ class ArchConfig:
     qkv_bias: bool = False
     sliding_window: int = 0  # swa only
     rope_theta: float = 1e4
+    # SWA execution path: "xla" = blockwise-jnp banded softmax; any dispatch
+    # backend ("auto" | "pallas-tpu" | "pallas-interpret" | "reference")
+    # routes through repro.kernels.dispatch with autotuned (blk_q, blk_k).
+    # The Chimera kernel backend lives on ChimeraAttentionConfig.backend.
+    swa_backend: str = "xla"
 
     # MLA (MiniCPM3 / DeepSeek style)
     q_lora_rank: int = 0

@@ -61,6 +61,9 @@ class ChimeraAttentionConfig:
     use_stream: bool = True
     gamma: float = 1e-6
     use_pallas: bool = False  # TPU kernels; False = pure-jnp (XLA) path
+    # kernel backend when use_pallas is set: "auto" | "pallas-tpu" |
+    # "pallas-interpret" | "reference" (see repro.kernels.dispatch)
+    backend: str = "auto"
     # repeat KV to the query-head count so head-sharded TP works when
     # n_kv_heads doesn't divide the model axis (e.g. kv=8 on 16-way TP);
     # per-head stream state grows Gq-fold but shards TP-fold — net win.
@@ -170,6 +173,7 @@ def chimera_attention(
         num, den = _kops.chimera_attention_partials(
             qh, kh, v, phi_q, phi_k, chunk_size=L,
             use_local=cfg.use_local, use_stream=cfg.use_stream,
+            backend=cfg.backend,
         )
         if cfg.n_global > 0:
             gnum, gden = _global_partials(cfg, params, qh, phi_q)
@@ -348,6 +352,39 @@ def chimera_decode_step(
     slot = (jnp.arange(L)[None, :] == c[:, None])[:, None, :, None]  # (B,1,L,1)
     k_buf = jnp.where(slot, kh[:, :, None, :], state.k_buf)
     v_buf = jnp.where(slot, v_t[:, :, None, :], state.v_buf)
+
+    if cfg.use_pallas and cfg.use_local and cfg.use_stream and cfg.n_global == 0:
+        # fused per-packet program through the dispatch registry: the kernel
+        # performs ring write / local / stream / merge / fold in one pass
+        # (it receives the PRE-write buffers and redoes the slot write)
+        from repro.kernels.decode_step import ops as _dops
+
+        phi_buf = apply_feature_map(cfg.feature_map, params["fm"], k_buf)
+        m = phi_q.shape[-1]
+        BH = B * n_kv
+        out, (S2, Z2, kb2, vb2, c2) = _dops.decode_step(
+            qh.reshape(BH, Gq, d),
+            kh.reshape(BH, d),
+            v_t.reshape(BH, d_v),
+            phi_q.reshape(BH, Gq, m),
+            phi_buf.reshape(BH, L, m),
+            state.k_buf.reshape(BH, L, d),
+            state.v_buf.reshape(BH, L, d_v),
+            state.S.reshape(BH, m, d_v),
+            state.Z.reshape(BH, m),
+            jnp.repeat(c, n_kv),
+            chunk_size=L,
+            gamma=cfg.gamma,
+            backend=cfg.backend,
+        )
+        new_state = ChimeraState(
+            S=S2.reshape(B, n_kv, m, d_v),
+            Z=Z2.reshape(B, n_kv, m),
+            k_buf=kb2.reshape(B, n_kv, L, d),
+            v_buf=vb2.reshape(B, n_kv, L, d_v),
+            count=c2.reshape(B, n_kv)[:, 0],
+        )
+        return out.reshape(B, H, d_v), new_state
 
     num = jnp.zeros((B, n_kv, Gq, d_v), q_t.dtype)
     den = jnp.zeros((B, n_kv, Gq), q_t.dtype)

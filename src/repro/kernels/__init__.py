@@ -2,6 +2,12 @@
 
 Each kernel package contains:
   kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
-  ops.py    — jit'd public wrapper (with interpret-mode fallback on CPU)
+  ops.py    — jit'd public wrapper (backend-dispatched, autotuned tiles)
   ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Shared infrastructure (DESIGN.md §8):
+  dispatch.py — ONE registry mapping (family, backend) -> implementation,
+                backends: pallas-tpu | pallas-interpret | reference
+  autotune.py — benchmark-driven tile sweep under the Eq. 11 VMEM budget,
+                JSON on-disk cache + MXU-aligned heuristic defaults
 """

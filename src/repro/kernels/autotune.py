@@ -1,0 +1,268 @@
+"""Benchmark-driven tile/chunk autotuner for the kernel families
+(DESIGN.md §8).
+
+The paper derives its operating point from hardware budgets (Eq. 11: the
+per-flow state must fit the SRAM budget); the TPU realization has the same
+shape — a kernel tile is only admissible when its VMEM working set fits the
+per-core budget.  This module:
+
+  * enumerates candidate tiles per family (``candidate_tiles``), filtered
+    by the Eq. 11-analogue VMEM budget check (``fits_vmem``),
+  * times each candidate (``sweep``) and records the winner in a JSON
+    on-disk cache keyed by (family, backend, shape signature, dtype),
+  * answers tile queries (``get_tiles``): cache hit → the tuned tiles,
+    miss → a cheap MXU-aligned heuristic (``heuristic_tiles``).
+
+Tile semantics per family:
+
+  chimera_attention   {"chunk_size": L}   — NOTE: L is a *model* hyper-
+      parameter (it sets the local/stream boundary), so the tuner never
+      overrides a configured chunk; the sweep reports throughput per L so
+      configs can pick an operating point under the budget.
+  window_attention    {"blk_q": Bq, "blk_k": Bk} — pure performance knobs.
+  decode_step         {"chunk_size": L}   — ring length; semantic like
+      chimera's L, swept for the roofline tables only.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/autotune.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.hardware_model import DEFAULT_TPU, TPUSpec
+
+Tiles = Dict[str, int]
+Dims = Dict[str, int]
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_BYTES = 4  # kernels accumulate in fp32
+_PIPELINE = 2  # double-buffered in/out blocks
+_POW2 = (32, 64, 128, 256, 512)
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        CACHE_ENV,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json"),
+    )
+
+
+# --------------------------------------------------------------------------
+# On-disk cache
+# --------------------------------------------------------------------------
+
+class AutotuneCache:
+    """JSON file cache: key -> {"tiles": {...}, "us": float}."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._data: Optional[Dict[str, dict]] = None
+
+    def _load(self) -> Dict[str, dict]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: str) -> Optional[dict]:
+        return self._load().get(key)
+
+    def put(self, key: str, tiles: Tiles, us: float) -> None:
+        self._load()[key] = {"tiles": dict(tiles), "us": float(us)}
+
+    def save(self) -> None:
+        if self._data is None:
+            return
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+
+def cache_key(family: str, backend: str, dims: Dims, dtype) -> str:
+    sig = ",".join(f"{k}={v}" for k, v in sorted(dims.items()))
+    return f"{family}|{backend}|{sig}|{jax.numpy.dtype(dtype).name}"
+
+
+# --------------------------------------------------------------------------
+# VMEM budget (the Eq. 11 analogue: working set must fit the SRAM tier)
+# --------------------------------------------------------------------------
+
+def vmem_bytes(family: str, tiles: Tiles, dims: Dims) -> int:
+    """Per-grid-step VMEM working set (fp32, incl. double buffering)."""
+    if family == "chimera_attention":
+        L = tiles["chunk_size"]
+        d, dv, m = dims["d"], dims["dv"], dims["m"]
+        gq = dims.get("gq", 1)
+        lanes = max(128, dv)
+        blocks = (
+            gq * L * (d + m)          # q, φq
+            + L * (2 * d + dv + m)    # k, v, φk (d-wide k twice ≈ padding slack)
+            + gq * L * (dv + lanes)   # num, den outputs
+        )
+        scratch = m * (dv + 1)        # carried (S, Z) stream state
+        return _BYTES * (_PIPELINE * blocks + scratch)
+    if family == "window_attention":
+        bq, bk = tiles["blk_q"], tiles["blk_k"]
+        d, dv = dims["d"], dims.get("dv", dims["d"])
+        blocks = bq * d + bk * (d + dv) + bq * dv
+        scratch = bq * (2 * 128 + dv)  # online-softmax (m, l, acc)
+        return _BYTES * (_PIPELINE * blocks + scratch)
+    if family == "decode_step":
+        L = tiles["chunk_size"]
+        d, dv, m = dims["d"], dims["dv"], dims["m"]
+        gq = dims.get("gq", 1)
+        blocks = gq * (2 * d + 2 * dv + m) + L * (2 * d + 2 * dv + m) + m * (dv + 1)
+        return _BYTES * (_PIPELINE * blocks + m * (dv + 1))
+    raise KeyError(f"unknown kernel family {family!r}")
+
+
+def vmem_budget(spec: TPUSpec = DEFAULT_TPU) -> int:
+    """Usable per-core VMEM: half the chip total (see TPUSpec note)."""
+    return spec.vmem_bytes // 2
+
+
+def fits_vmem(
+    family: str, tiles: Tiles, dims: Dims, spec: TPUSpec = DEFAULT_TPU
+) -> bool:
+    return vmem_bytes(family, tiles, dims) <= vmem_budget(spec)
+
+
+# --------------------------------------------------------------------------
+# Candidates & heuristics
+# --------------------------------------------------------------------------
+
+def _valid_chunks(dims: Dims, family: str, spec: TPUSpec) -> List[int]:
+    T = dims.get("T", 0)
+    out = []
+    for L in _POW2:
+        if T and T % L != 0:
+            continue
+        if fits_vmem(family, {"chunk_size": L}, dims, spec):
+            out.append(L)
+    return out
+
+
+def candidate_tiles(
+    family: str, dims: Dims, spec: TPUSpec = DEFAULT_TPU
+) -> List[Tiles]:
+    """Budget-admissible tile candidates (may be empty for awkward shapes)."""
+    if family in ("chimera_attention", "decode_step"):
+        return [{"chunk_size": L} for L in _valid_chunks(dims, family, spec)]
+    if family == "window_attention":
+        T, W = dims["T"], dims["window"]
+        cands = []
+        for bq in _POW2:
+            if T % bq != 0:
+                continue
+            for bk in _POW2:
+                # the kernel's band-cover arithmetic needs bq % bk == 0
+                if T % bk != 0 or W % bk != 0 or bq % bk != 0:
+                    continue
+                t = {"blk_q": bq, "blk_k": bk}
+                if fits_vmem(family, t, dims, spec):
+                    cands.append(t)
+        return cands
+    raise KeyError(f"unknown kernel family {family!r}")
+
+
+def heuristic_tiles(
+    family: str, dims: Dims, spec: TPUSpec = DEFAULT_TPU
+) -> Optional[Tiles]:
+    """Cheap default when the cache has no entry: the largest admissible
+    tile ≤ the MXU edge (128) — MXU-aligned when the shape allows it —
+    falling back to the largest admissible tile overall.  None when no
+    candidate is admissible (callers fall back to the reference backend)."""
+    cands = candidate_tiles(family, dims, spec)
+    if not cands:
+        return None
+    mxu = spec.mxu_dim
+
+    def score(t: Tiles) -> Tuple[int, int]:
+        vals = tuple(t.values())
+        aligned = sum(1 for v in vals if v == mxu)
+        return (aligned, -sum(abs(v - mxu) for v in vals))
+
+    return max(cands, key=score)
+
+
+def get_tiles(
+    family: str,
+    dims: Dims,
+    backend: str,
+    dtype=None,
+    cache: Optional[AutotuneCache] = None,
+    spec: TPUSpec = DEFAULT_TPU,
+) -> Optional[Tiles]:
+    """Tuned tiles from the cache, else the heuristic default."""
+    import jax.numpy as jnp
+
+    dtype = dtype if dtype is not None else jnp.float32
+    if cache is None:
+        cache = AutotuneCache()
+    hit = cache.get(cache_key(family, backend, dims, dtype))
+    if hit is not None:
+        return dict(hit["tiles"])
+    return heuristic_tiles(family, dims, spec)
+
+
+# --------------------------------------------------------------------------
+# Sweep
+# --------------------------------------------------------------------------
+
+def _time_us(fn: Callable[[], object], iters: int, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def sweep(
+    family: str,
+    dims: Dims,
+    make_fn: Callable[[Tiles], Callable[[], object]],
+    backend: str,
+    dtype=None,
+    cache: Optional[AutotuneCache] = None,
+    iters: int = 3,
+    spec: TPUSpec = DEFAULT_TPU,
+) -> List[Tuple[Tiles, float]]:
+    """Time every admissible tile candidate and cache the winner.
+
+    ``make_fn(tiles)`` builds a zero-arg callable running the kernel with
+    those tiles.  Returns [(tiles, us_per_call), ...] sorted fastest-first;
+    the best entry is written to the on-disk cache so subsequent
+    ``get_tiles`` calls (same shape/dtype/backend) return it.
+    """
+    import jax.numpy as jnp
+
+    dtype = dtype if dtype is not None else jnp.float32
+    if cache is None:
+        cache = AutotuneCache()
+    rows: List[Tuple[Tiles, float]] = []
+    for tiles in candidate_tiles(family, dims, spec):
+        rows.append((tiles, _time_us(make_fn(tiles), iters)))
+    rows.sort(key=lambda r: r[1])
+    if rows:
+        best_tiles, best_us = rows[0]
+        cache.put(cache_key(family, backend, dims, dtype), best_tiles, best_us)
+        cache.save()
+    return rows

@@ -1,10 +1,12 @@
 """Public jit'd wrapper for the chunked Chimera attention kernel.
 
-On CPU (this container) the kernel executes in interpret mode; on TPU it
-compiles to Mosaic.  The backward pass is provided via ``jax.custom_vjp``
-with the mathematically identical reference formulation (the fwd kernel is
-the serving/prefill hot path; training backward runs through XLA which
-already fuses the chunked einsum chain well — see DESIGN.md §7).
+Backend selection goes through :mod:`repro.kernels.dispatch` — ``"auto"``
+compiles to Mosaic on TPU and runs the interpreter on CPU; ``"reference"``
+executes the pure-jnp oracle.  The backward pass is provided via
+``jax.custom_vjp`` with the mathematically identical reference formulation
+(the fwd kernel is the serving/prefill hot path; training backward runs
+through XLA which already fuses the chunked einsum chain well — see
+DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -13,18 +15,13 @@ import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.chimera_attention.kernel import chimera_attention_pallas
+from repro.kernels import dispatch
 from repro.kernels.chimera_attention.ref import chimera_attention_partials_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(5, 6, 7)
+    jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8)
 )
 def chimera_attention_partials(
     q: jax.Array,  # (B, Hkv, Gq, T, d) normalized
@@ -35,34 +32,24 @@ def chimera_attention_partials(
     chunk_size: int = 128,
     use_local: bool = True,
     use_stream: bool = True,
+    backend: str = "auto",
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (num (B,Hkv,Gq,T,dv), den (B,Hkv,Gq,T)) partials."""
-    B, Hkv, Gq, T, d = q.shape
-    num, den = chimera_attention_pallas(
-        q.reshape(B * Hkv, Gq, T, d),
-        k.reshape(B * Hkv, T, k.shape[-1]),
-        v.reshape(B * Hkv, T, v.shape[-1]),
-        phi_q.reshape(B * Hkv, Gq, T, phi_q.shape[-1]),
-        phi_k.reshape(B * Hkv, T, phi_k.shape[-1]),
-        chunk_size=chunk_size,
-        use_local=use_local,
-        use_stream=use_stream,
-        interpret=not _on_tpu(),
-    )
-    return (
-        num.reshape(B, Hkv, Gq, T, v.shape[-1]),
-        den.reshape(B, Hkv, Gq, T),
+    impl = dispatch.resolve("chimera_attention", backend)
+    return impl(
+        q, k, v, phi_q, phi_k,
+        chunk_size=chunk_size, use_local=use_local, use_stream=use_stream,
     )
 
 
-def _fwd(q, k, v, phi_q, phi_k, chunk_size, use_local, use_stream):
+def _fwd(q, k, v, phi_q, phi_k, chunk_size, use_local, use_stream, backend):
     out = chimera_attention_partials(
-        q, k, v, phi_q, phi_k, chunk_size, use_local, use_stream
+        q, k, v, phi_q, phi_k, chunk_size, use_local, use_stream, backend
     )
     return out, (q, k, v, phi_q, phi_k)
 
 
-def _bwd(chunk_size, use_local, use_stream, res, grads):
+def _bwd(chunk_size, use_local, use_stream, backend, res, grads):
     q, k, v, phi_q, phi_k = res
 
     def ref_fn(q, k, v, phi_q, phi_k):

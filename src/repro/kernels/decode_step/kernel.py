@@ -46,6 +46,7 @@ def _kernel(
     count_out,  # (1, 1) int32
     *,
     chunk_size: int,
+    gamma: float,
 ):
     L = chunk_size
     d = q_ref.shape[-1]
@@ -74,7 +75,7 @@ def _kernel(
     den += jnp.einsum("gm,m->g", pq_ref[...], Z, preferred_element_type=jnp.float32)
 
     # 4. merge
-    out_ref[...] = (num / (den[:, None] + 1e-6)).astype(out_ref.dtype)
+    out_ref[...] = (num / (den[:, None] + gamma)).astype(out_ref.dtype)
 
     # 5. fold-on-full (Eqs. 9-10)
     full = (c + 1 >= L).astype(jnp.float32)
@@ -88,7 +89,7 @@ def _kernel(
     count_out[0, 0] = jnp.where(c + 1 >= L, 0, c + 1)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk_size", "interpret"))
+@functools.partial(jax.jit, static_argnames=("chunk_size", "gamma", "interpret"))
 def decode_step_pallas(
     q: jax.Array,  # (BH, Gq, d)
     k_t: jax.Array,  # (BH, d)
@@ -102,6 +103,7 @@ def decode_step_pallas(
     count: jax.Array,  # (BH,) int32 (same value per flow here; per-flow ok)
     *,
     chunk_size: int,
+    gamma: float = 1e-6,
     interpret: bool = False,
 ):
     BH, Gq, d = q.shape
@@ -141,7 +143,7 @@ def decode_step_pallas(
         jax.ShapeDtypeStruct((BH, 1, 1), jnp.int32),
     ]
     outs = pl.pallas_call(
-        functools.partial(_kernel, chunk_size=L),
+        functools.partial(_kernel, chunk_size=L, gamma=gamma),
         grid_spec=grid_spec,
         out_shape=out_shape,
         input_output_aliases={6: 1, 7: 2, 8: 3, 9: 4},  # bufs & state in-place

@@ -1,0 +1,40 @@
+"""Public wrapper for the fused streaming decode step.
+
+One call per engine tick and (batch·kv-head) flow: ring write → exact local
+readout → φ-stream readout → merge → fold-on-full (Alg. 1 lines 12-16).
+Backend selection goes through :mod:`repro.kernels.dispatch`; the serve
+engine reaches this op via ``chimera_decode_step`` when the model config
+enables the kernel path (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels import dispatch
+
+
+def decode_step(
+    q: jax.Array,  # (BH, Gq, d) normalized query
+    k_t: jax.Array,  # (BH, d) normalized key
+    v_t: jax.Array,  # (BH, dv)
+    phi_q: jax.Array,  # (BH, Gq, m)
+    phi_buf: jax.Array,  # (BH, L, m) φ of the ring incl. the new token
+    k_buf: jax.Array,  # (BH, L, d) ring state BEFORE this step
+    v_buf: jax.Array,  # (BH, L, dv)
+    S: jax.Array,  # (BH, m, dv)
+    Z: jax.Array,  # (BH, m)
+    count: jax.Array,  # () or (BH,) int32 fill level(s)
+    *,
+    chunk_size: int,
+    gamma: float = 1e-6,
+    backend: str = "auto",
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Returns (out (BH,Gq,dv), (S, Z, k_buf, v_buf, count)) post-step."""
+    impl = dispatch.resolve("decode_step", backend)
+    return impl(
+        q, k_t, v_t, phi_q, phi_buf, k_buf, v_buf, S, Z, count,
+        chunk_size=chunk_size, gamma=gamma,
+    )

@@ -5,6 +5,11 @@ minus the feature-map application and global term (those are applied by the
 caller): buffer write → exact local readout → stream readout → merge →
 fold-on-full.  This is the dataplane per-packet program (Alg. 1 lines 12-16)
 as one fused op.
+
+``count`` may be a scalar (every flow at the same fill level — the original
+seed semantics) or a ``(BH,)`` vector of per-flow fill levels, matching the
+Pallas kernel's scalar-prefetch semantics so continuous-batching engines can
+start/stop requests independently.
 """
 
 from __future__ import annotations
@@ -25,27 +30,35 @@ def decode_step_ref(
     v_buf: jnp.ndarray,  # (BH, L, dv)
     S: jnp.ndarray,  # (BH, m, dv)
     Z: jnp.ndarray,  # (BH, m)
-    count: jnp.ndarray,  # () int32
+    count: jnp.ndarray,  # () or (BH,) int32
     chunk_size: int,
+    gamma: float = 1e-6,
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
     BH, Gq, d = q.shape
     L = chunk_size
-    c = count
-    k_buf = k_buf.at[:, c].set(k_t)
-    v_buf = v_buf.at[:, c].set(v_t)
-    valid = (jnp.arange(L) <= c).astype(q.dtype)
-    s_loc = jnp.exp(jnp.einsum("bgd,bjd->bgj", q, k_buf) / math.sqrt(d)) * valid
+    c = jnp.asarray(count)
+    scalar_count = c.ndim == 0
+    if scalar_count:
+        c = jnp.broadcast_to(c, (BH,))
+    slot = (jnp.arange(L)[None, :] == c[:, None])[..., None]  # (BH, L, 1)
+    k_buf = jnp.where(slot, k_t[:, None, :], k_buf)
+    v_buf = jnp.where(slot, v_t[:, None, :], v_buf)
+    valid = (jnp.arange(L)[None, :] <= c[:, None]).astype(q.dtype)  # (BH, L)
+    s_loc = jnp.exp(jnp.einsum("bgd,bjd->bgj", q, k_buf) / math.sqrt(d))
+    s_loc = s_loc * valid[:, None, :]
     num = jnp.einsum("bgj,bjd->bgd", s_loc, v_buf)
     den = jnp.sum(s_loc, axis=-1)
     num = num + jnp.einsum("bgm,bmd->bgd", phi_q, S)
     den = den + jnp.einsum("bgm,bm->bg", phi_q, Z)
-    out = num / (den[..., None] + 1e-6)
-    full = c + 1 >= L
+    out = num / (den[..., None] + gamma)
+    full = c + 1 >= L  # (BH,)
     S_fold = S + jnp.einsum("bjm,bjd->bmd", phi_k_buf, v_buf)
     Z_fold = Z + jnp.sum(phi_k_buf, axis=1)
-    S = jnp.where(full, S_fold, S)
-    Z = jnp.where(full, Z_fold, Z)
-    k_buf = jnp.where(full, jnp.zeros_like(k_buf), k_buf)
-    v_buf = jnp.where(full, jnp.zeros_like(v_buf), v_buf)
+    S = jnp.where(full[:, None, None], S_fold, S)
+    Z = jnp.where(full[:, None], Z_fold, Z)
+    k_buf = jnp.where(full[:, None, None], jnp.zeros_like(k_buf), k_buf)
+    v_buf = jnp.where(full[:, None, None], jnp.zeros_like(v_buf), v_buf)
     new_count = jnp.where(full, 0, c + 1).astype(jnp.int32)
+    if scalar_count:
+        new_count = new_count[0]
     return out, (S, Z, k_buf, v_buf, new_count)

@@ -6,10 +6,13 @@ O(T·W·d): the kv-block grid axis only covers the W-wide band, so doubling
 context length does not change per-token work — the dataplane line-rate
 property.
 
-Tiling: grid = (BH, T/Bq, W/Bk + 1) with the kv axis innermost and
+Tiling: grid = (BH, T/Bq, (W+Bq)/Bk) with the kv axis innermost and
 sequential; online-softmax running (max, sum, acc) live in VMEM scratch.
-kv block index = q_block + j − W/Bk, clamped to 0 for the BlockSpec and
-masked out arithmetically when the unclamped index is negative (avoids
+Rectangular tiles are supported for Bq a multiple of Bk: q block i covers
+rows [i·Bq, (i+1)·Bq), so its band needs kv blocks
+[(i·Bq − W)/Bk, ((i+1)·Bq)/Bk) — the kv block index is
+(i+1)·Bq/Bk − n_k_steps + j, clamped to 0 for the BlockSpec and masked out
+arithmetically when the unclamped index is negative (avoids
 double-counting block 0 at the left edge).
 """
 
@@ -24,6 +27,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def _kernel(
@@ -50,7 +56,7 @@ def _kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kb = i + j - (n_k_steps - 1)  # unclamped kv block index
+    kb = (i + 1) * (blk_q // blk_k) - n_k_steps + j  # unclamped kv block index
     rows = i * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
     cols = kb * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
     delta = rows - cols
@@ -94,11 +100,12 @@ def window_attention_pallas(
     dv = v.shape[-1]
     assert T % blk_q == 0 and T % blk_k == 0
     assert window % blk_k == 0, "window must be a multiple of blk_k"
-    n_k_steps = window // blk_k + 1  # band cover for one q block
+    assert blk_q % blk_k == 0, "blk_q must be a multiple of blk_k"
+    n_k_steps = (window + blk_q) // blk_k  # band cover for one q block
     grid = (BH, T // blk_q, n_k_steps)
 
     def kv_index(b, i, j):
-        kb = i + j - (n_k_steps - 1)
+        kb = (i + 1) * (blk_q // blk_k) - n_k_steps + j
         return (b, jnp.maximum(kb, 0), 0)
 
     return pl.pallas_call(
@@ -122,7 +129,7 @@ def window_attention_pallas(
             pltpu.VMEM((blk_q, 128), jnp.float32),
             pltpu.VMEM((blk_q, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

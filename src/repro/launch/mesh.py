@@ -10,27 +10,34 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    # jax.sharding.AxisType (and make_mesh's axis_types kwarg) only exist on
+    # newer jax releases; fall back to an explicit device-array Mesh
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    except (AttributeError, TypeError):
+        import math
+
+        import numpy as np
+
+        n = math.prod(shape)
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return jax.sharding.Mesh(devs, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) data×model single pod; (2, 16, 16) pod×data×model for two
     pods (512 chips).  The `pod` axis composes with `data` for the batch
     dimension and optionally joins parameter sharding (fsdp_pod rules)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     if multi_pod:
-        return jax.make_mesh(
-            (2, n_data, n_model),
-            ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (n_data, n_model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return _mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return _mesh((n_data, n_model), ("data", "model"))

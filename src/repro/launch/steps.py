@@ -137,6 +137,7 @@ class Cell:
     out_shardings: Any
     donate_argnums: Tuple[int, ...]
     trip_counts: Dict[str, int]
+    kernel_backend: str = "xla"  # effective kernel path for this cell
 
     def lower(self):
         jitted = jax.jit(
@@ -145,7 +146,11 @@ class Cell:
             out_shardings=self.out_shardings,
             donate_argnums=self.donate_argnums,
         )
-        with jax.sharding.set_mesh(self.mesh):
+        set_mesh = getattr(jax.sharding, "set_mesh", None)
+        if set_mesh is not None:
+            with set_mesh(self.mesh):
+                return jitted.lower(*self.args)
+        with self.mesh:  # older jax: mesh context manager
             return jitted.lower(*self.args)
 
 
@@ -180,7 +185,13 @@ def build_cell(
     act_sp: bool = True,
     microbatches: int = 0,  # 0 = auto (grad accumulation for ≥100B trains)
     opt_cfg: Optional[AdamWConfig] = None,
+    kernel_backend: Optional[str] = None,  # None keeps cfg as-is; "xla" pins
+    # the pure-jnp paths; dispatch backends route attention through
+    # repro.kernels.dispatch end-to-end (Chimera partials + SWA kernel)
 ) -> Cell:
+    from repro.kernels.dispatch import apply_kernel_backend
+
+    cfg, effective_backend = apply_kernel_backend(cfg, kernel_backend)
     rules = shard.make_rules(rules_mode, seq_sharded=seq_sharded, act_sp=act_sp)
     shard.install_activation_constraints(mesh, rules)
     tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
@@ -240,6 +251,7 @@ def build_cell(
             out_shardings=(param_sh, opt_sh, None),
             donate_argnums=(0, 1),
             trip_counts=scan_trip_counts(cfg, shape),
+            kernel_backend=effective_backend,
         )
     if shape.kind == "prefill":
         fn = steps.make_prefill_step(cfg)
@@ -254,6 +266,7 @@ def build_cell(
             out_shardings=logits_shape,
             donate_argnums=(),
             trip_counts=scan_trip_counts(cfg, shape),
+            kernel_backend=effective_backend,
         )
     # decode
     fn = steps.make_serve_step(cfg)
@@ -272,4 +285,5 @@ def build_cell(
         out_shardings=(None, in_batch_sh["caches"]),
         donate_argnums=(3,),
         trip_counts=scan_trip_counts(cfg, shape),
+        kernel_backend=effective_backend,
     )

@@ -105,6 +105,22 @@ def _masked_softmax_attention(q, k, v, causal: bool, window: int = 0) -> jax.Arr
     return out.reshape(B, H, T, v.shape[-1])
 
 
+def _swa_dispatch(cfg: ArchConfig, q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Route SWA through the kernel dispatch registry (cfg.swa_backend).
+
+    The Pallas kernel wants KV pre-expanded to the query-head count; tiles
+    come from the autotune cache (tuned) or the MXU heuristic (default)."""
+    from repro.kernels.window_attention import ops as wops
+
+    H, Hkv = q.shape[1], k.shape[1]
+    if Hkv < H:
+        k = jnp.repeat(k, H // Hkv, axis=1)
+        v = jnp.repeat(v, H // Hkv, axis=1)
+    return wops.sliding_window_attention(
+        q, k, v, cfg.sliding_window, backend=cfg.swa_backend
+    )
+
+
 def banded_softmax_attention(
     q: jax.Array, k: jax.Array, v: jax.Array, window: int, blk: int = 1024
 ) -> jax.Array:
@@ -201,7 +217,10 @@ def attention_layer(
         with jax.named_scope("chimera"):
             o = chimera.chimera_attention(cfg.chimera, params["chimera"], q, k, v)
     elif cfg.attention_kind == "swa" and cfg.sliding_window and causal:
-        o = banded_softmax_attention(q, k, v, cfg.sliding_window, cfg.softmax_blk)
+        if cfg.swa_backend != "xla":
+            o = _swa_dispatch(cfg, q, k, v)
+        else:
+            o = banded_softmax_attention(q, k, v, cfg.sliding_window, cfg.softmax_blk)
     else:
         o = blockwise_softmax_attention(q, k, v, cfg.softmax_blk, causal=causal)
     o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.n_heads * cfg.head_dim)
@@ -461,7 +480,10 @@ def attention_prefill(
         with jax.named_scope("chimera"):
             o, cache = chimera.chimera_prefill(cfg.chimera, params["chimera"], q, k, v)
     elif cfg.attention_kind == "swa" and cfg.sliding_window:
-        o = banded_softmax_attention(q, k, v, cfg.sliding_window, cfg.softmax_blk)
+        if cfg.swa_backend != "xla":
+            o = _swa_dispatch(cfg, q, k, v)
+        else:
+            o = banded_softmax_attention(q, k, v, cfg.sliding_window, cfg.softmax_blk)
         cache = _fill_kv_cache(cfg, k, v, max_len)
     else:
         o = blockwise_softmax_attention(q, k, v, cfg.softmax_blk, causal=True)

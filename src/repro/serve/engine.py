@@ -45,7 +45,14 @@ class ServeEngine:
         max_len: int = 4096,
         temperature: float = 0.0,
         seed: int = 0,
+        backend: Optional[str] = None,
     ):
+        # kernel backend selection end-to-end: "xla" pins the pure-jnp paths,
+        # any dispatch backend routes the decode/prefill hot paths through
+        # repro.kernels.dispatch (see DESIGN.md §8)
+        from repro.kernels.dispatch import apply_kernel_backend
+
+        cfg, self.backend = apply_kernel_backend(cfg, backend)
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots

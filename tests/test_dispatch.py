@@ -1,0 +1,313 @@
+"""Kernel dispatch registry + tile autotuner: every (family, backend) pair
+resolves, CPU-runnable backends agree numerically, the autotune cache
+round-trips on disk, the Eq. 11 VMEM budget guard filters candidates, and
+the backend axis is selectable end-to-end (engine / launcher / config)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, dispatch
+
+KEY = jax.random.PRNGKey(0)
+
+# backends that execute on a CPU host (pallas-tpu requires TPU hardware)
+CPU_BACKENDS = ("pallas-interpret", "reference")
+
+
+def _chimera_args(B=1, Hkv=2, Gq=2, T=64, d=16, m=32, dv=16):
+    ks = jax.random.split(KEY, 5)
+    return (
+        jax.random.normal(ks[0], (B, Hkv, Gq, T, d)),
+        jax.random.normal(ks[1], (B, Hkv, T, d)),
+        jax.random.normal(ks[2], (B, Hkv, T, dv)),
+        jax.nn.elu(jax.random.normal(ks[3], (B, Hkv, Gq, T, m))) + 1,
+        jax.nn.elu(jax.random.normal(ks[4], (B, Hkv, T, m))) + 1,
+    )
+
+
+def _decode_args(BH=4, Gq=2, L=8, d=16, m=32, dv=16):
+    ks = jax.random.split(KEY, 9)
+    return (
+        jax.random.normal(ks[0], (BH, Gq, d)),
+        jax.random.normal(ks[1], (BH, d)),
+        jax.random.normal(ks[2], (BH, dv)),
+        jax.nn.elu(jax.random.normal(ks[3], (BH, Gq, m))) + 1,
+        jax.nn.elu(jax.random.normal(ks[4], (BH, L, m))) + 1,
+        jax.random.normal(ks[5], (BH, L, d)),
+        jax.random.normal(ks[6], (BH, L, dv)),
+        jax.random.normal(ks[7], (BH, m, dv)),
+        jax.nn.relu(jax.random.normal(ks[8], (BH, m))) + 1,
+    )
+
+
+class TestRegistry:
+    def test_every_family_registers_every_backend(self):
+        assert dispatch.families() == (
+            "chimera_attention", "decode_step", "window_attention"
+        )
+        for family in dispatch.families():
+            assert dispatch.backends(family) == dispatch.BACKENDS
+            for backend in dispatch.BACKENDS:
+                assert callable(dispatch.resolve(family, backend))
+
+    def test_auto_resolves_per_host(self):
+        expect = "pallas-tpu" if jax.default_backend() == "tpu" else "pallas-interpret"
+        assert dispatch.resolve_backend("auto") == expect
+        assert dispatch.resolve_backend("reference") == "reference"
+
+    def test_unknown_family_and_backend_raise(self):
+        with pytest.raises(KeyError):
+            dispatch.backends("nonexistent_kernel")
+        with pytest.raises(ValueError):
+            dispatch.resolve_backend("cuda")
+        with pytest.raises(ValueError):
+            dispatch.resolve("chimera_attention", "cuda")
+
+    def test_register_rejects_unknown_backend(self):
+        with pytest.raises(ValueError):
+            dispatch.register("chimera_attention", "tensorcore")
+
+
+class TestBackendAgreement:
+    def test_chimera_interpret_matches_reference(self):
+        q, k, v, pq, pk = _chimera_args()
+        outs = [
+            dispatch.resolve("chimera_attention", b)(q, k, v, pq, pk, chunk_size=16)
+            for b in CPU_BACKENDS
+        ]
+        np.testing.assert_allclose(outs[0][0], outs[1][0], atol=5e-4, rtol=5e-4)
+        np.testing.assert_allclose(outs[0][1], outs[1][1], atol=5e-4, rtol=5e-4)
+
+    def test_window_interpret_matches_reference(self):
+        ks = jax.random.split(KEY, 3)
+        q, k, v = (jax.random.normal(ks[i], (2, 256, 32)) for i in range(3))
+        outs = [
+            dispatch.resolve("window_attention", b)(
+                q, k, v, window=128, blk_q=64, blk_k=64
+            )
+            for b in CPU_BACKENDS
+        ]
+        np.testing.assert_allclose(outs[0], outs[1], atol=2e-4, rtol=2e-4)
+
+    def test_decode_interpret_matches_reference_per_flow_counts(self):
+        args = _decode_args()
+        count = jnp.array([0, 3, 7, 7], jnp.int32)  # ragged fill levels
+        outs = [
+            dispatch.resolve("decode_step", b)(*args, count, chunk_size=8)
+            for b in CPU_BACKENDS
+        ]
+        np.testing.assert_allclose(outs[0][0], outs[1][0], atol=1e-5)
+        for a, b in zip(outs[0][1], outs[1][1]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    def test_ops_wrappers_accept_backend_kw(self):
+        from repro.kernels.chimera_attention.ops import chimera_attention_partials
+        from repro.kernels.window_attention.ops import sliding_window_attention
+
+        q, k, v, pq, pk = _chimera_args()
+        n1, d1 = chimera_attention_partials(
+            q, k, v, pq, pk, chunk_size=16, backend="reference"
+        )
+        n2, d2 = chimera_attention_partials(
+            q, k, v, pq, pk, chunk_size=16, backend="pallas-interpret"
+        )
+        np.testing.assert_allclose(n1, n2, atol=5e-4, rtol=5e-4)
+
+        ks = jax.random.split(KEY, 3)
+        qw, kw, vw = (jax.random.normal(ks[i], (1, 2, 256, 32)) for i in range(3))
+        o1 = sliding_window_attention(qw, kw, vw, 128, backend="reference")
+        o2 = sliding_window_attention(qw, kw, vw, 128, backend="pallas-interpret")
+        np.testing.assert_allclose(o1, o2, atol=2e-4, rtol=2e-4)
+
+    def test_window_dispatch_is_differentiable(self):
+        # SWA training path: pallas forward + reference custom_vjp backward
+        from repro.kernels.window_attention.ops import sliding_window_attention
+
+        ks = jax.random.split(KEY, 3)
+        q, k, v = (jax.random.normal(ks[i], (1, 2, 256, 32)) for i in range(3))
+
+        def loss(q, k, v, backend):
+            return jnp.sum(
+                sliding_window_attention(q, k, v, 128, backend=backend) ** 2
+            )
+
+        g_pl = jax.grad(loss)(q, k, v, "pallas-interpret")
+        g_ref = jax.grad(loss)(q, k, v, "reference")
+        np.testing.assert_allclose(g_pl, g_ref, atol=2e-3, rtol=2e-3)
+
+    def test_decode_scalar_count_shape_uniform(self):
+        # canonical-signature contract: scalar count in -> scalar count out
+        args = _decode_args()
+        for b in CPU_BACKENDS:
+            _, state = dispatch.resolve("decode_step", b)(
+                *args, jnp.int32(3), chunk_size=8
+            )
+            assert jnp.asarray(state[-1]).ndim == 0, b
+
+    def test_window_odd_shapes_fall_back_to_reference(self):
+        # T=100 divides no admissible tile: wrapper must still be exact
+        ks = jax.random.split(KEY, 3)
+        q, k, v = (jax.random.normal(ks[i], (1, 2, 100, 16)) for i in range(3))
+        from repro.kernels.window_attention.ops import sliding_window_attention
+
+        o1 = sliding_window_attention(q, k, v, 30, backend="pallas-interpret")
+        o2 = sliding_window_attention(q, k, v, 30, backend="reference")
+        np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+
+class TestAutotune:
+    def test_cache_roundtrip_on_disk(self, tmp_path):
+        path = str(tmp_path / "autotune.json")
+        dims = {"T": 256, "d": 32, "dv": 32, "window": 128}
+        key = autotune.cache_key(
+            "window_attention", "pallas-interpret", dims, jnp.float32
+        )
+        c = autotune.AutotuneCache(path)
+        assert c.get(key) is None
+        c.put(key, {"blk_q": 64, "blk_k": 64}, 12.5)
+        c.save()
+        c2 = autotune.AutotuneCache(path)  # fresh load from disk
+        assert c2.get(key) == {"tiles": {"blk_q": 64, "blk_k": 64}, "us": 12.5}
+        got = autotune.get_tiles(
+            "window_attention", dims, "pallas-interpret", cache=c2
+        )
+        assert got == {"blk_q": 64, "blk_k": 64}  # cache hit wins over heuristic
+
+    def test_vmem_budget_guard(self):
+        small = {"T": 256, "d": 32, "dv": 32, "m": 64, "gq": 1}
+        assert autotune.fits_vmem("chimera_attention", {"chunk_size": 128}, small)
+        huge = {"T": 0, "d": 4096, "dv": 4096, "m": 4096, "gq": 8}
+        assert not autotune.fits_vmem("chimera_attention", {"chunk_size": 512}, huge)
+        # candidate enumeration applies the same guard
+        assert autotune.candidate_tiles("chimera_attention", huge) == []
+        for t in autotune.candidate_tiles("chimera_attention", small):
+            assert autotune.fits_vmem("chimera_attention", t, small)
+
+    def test_heuristic_respects_divisibility(self):
+        tiles = autotune.heuristic_tiles(
+            "window_attention", {"T": 192, "d": 32, "dv": 32, "window": 64}
+        )
+        assert tiles is not None
+        assert 192 % tiles["blk_q"] == 0 and 64 % tiles["blk_k"] == 0
+        # no admissible tile at all -> None (caller falls back to reference)
+        assert autotune.heuristic_tiles(
+            "window_attention", {"T": 100, "d": 16, "dv": 16, "window": 30}
+        ) is None
+
+    def test_sweep_populates_cache(self, tmp_path):
+        cache = autotune.AutotuneCache(str(tmp_path / "sweep.json"))
+        dims = {"T": 128, "d": 8, "dv": 8, "m": 16, "gq": 1}
+        q, k, v, pq, pk = _chimera_args(T=128, d=8, m=16, dv=8)
+        impl = dispatch.resolve("chimera_attention", "reference")
+
+        def make_fn(tiles):
+            return lambda: impl(q, k, v, pq, pk, chunk_size=tiles["chunk_size"])
+
+        rows = autotune.sweep(
+            "chimera_attention", dims, make_fn, "reference",
+            cache=cache, iters=1,
+        )
+        assert rows and rows[0][1] <= rows[-1][1]  # fastest-first
+        got = autotune.get_tiles("chimera_attention", dims, "reference", cache=cache)
+        assert got == rows[0][0]  # subsequent queries return the winner
+
+
+class TestEndToEndBackendSelection:
+    def test_chimera_config_backend_reaches_dispatch(self):
+        from repro.core import chimera_attention as ca
+        from repro.core.feature_maps import FeatureMapConfig
+
+        cfg = ca.ChimeraAttentionConfig(
+            feature_map=FeatureMapConfig(kind="exp_prf", m=32),
+            chunk_size=16, n_global=0,
+        )
+        params = ca.init_chimera_attention(cfg, 2, 16, 16, KEY)
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 4, 64, 16))
+        k = jax.random.normal(ks[1], (2, 2, 64, 16))
+        v = jax.random.normal(ks[2], (2, 2, 64, 16))
+        out_xla = ca.chimera_attention(cfg, params, q, k, v)
+        for backend in CPU_BACKENDS:
+            cfg_b = dataclasses.replace(cfg, use_pallas=True, backend=backend)
+            out_b = ca.chimera_attention(cfg_b, params, q, k, v)
+            np.testing.assert_allclose(out_b, out_xla, atol=2e-4, rtol=2e-4)
+
+    def test_fused_decode_step_matches_jnp_path(self):
+        from repro.core import chimera_attention as ca
+        from repro.core.feature_maps import FeatureMapConfig
+
+        cfg = ca.ChimeraAttentionConfig(
+            feature_map=FeatureMapConfig(kind="exp_prf", m=32),
+            chunk_size=8, n_global=0,
+        )
+        cfg_pl = dataclasses.replace(
+            cfg, use_pallas=True, backend="pallas-interpret"
+        )
+        params = ca.init_chimera_attention(cfg, 2, 16, 16, KEY)
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 4, 20, 16))
+        k = jax.random.normal(ks[1], (2, 2, 20, 16))
+        v = jax.random.normal(ks[2], (2, 2, 20, 16))
+        s1 = ca.init_decode_state(cfg, 2, 2, 16, 16)
+        s2 = ca.init_decode_state(cfg, 2, 2, 16, 16)
+        for t in range(20):  # crosses two fold-on-full boundaries
+            o1, s1 = ca.chimera_decode_step(cfg, params, q[:, :, t], k[:, :, t], v[:, :, t], s1)
+            o2, s2 = ca.chimera_decode_step(cfg_pl, params, q[:, :, t], k[:, :, t], v[:, :, t], s2)
+            np.testing.assert_allclose(o1, o2, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(s1.S, s2.S, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1.count), np.asarray(s2.count))
+
+    def test_swa_dispatch_matches_banded_softmax(self):
+        from benchmarks.common import tiny_backbone
+        from repro.models import attention as A
+
+        cfg = tiny_backbone(
+            attention_kind="swa", sliding_window=64, use_chimera=False,
+        )
+        cfg_disp = dataclasses.replace(cfg, swa_backend="reference")
+        ks = jax.random.split(KEY, 4)
+        params, _ = A.init_attention(cfg, ks[0])
+        x = jax.random.normal(ks[1], (2, 128, cfg.d_model))
+        pos = jnp.broadcast_to(jnp.arange(128), (2, 128))
+        o_xla = A.attention_layer(cfg, params, x, pos)
+        o_disp = A.attention_layer(cfg_disp, params, x, pos)
+        np.testing.assert_allclose(o_xla, o_disp, atol=2e-4, rtol=2e-4)
+
+    def test_serve_engine_backend_param(self):
+        from benchmarks.common import tiny_backbone
+        from repro.models import model as M
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg = tiny_backbone()
+        params, _ = M.init_model(cfg, KEY)
+        gens = {}
+        for be in ("xla", "reference"):
+            eng = ServeEngine(cfg, params, batch_slots=1, max_len=32, backend=be)
+            assert eng.backend == be
+            req = Request(rid=0, prompt=list(range(1, 9)), max_new_tokens=4)
+            eng.submit(req)
+            eng.run_until_done(200)
+            gens[be] = req.generated
+        assert len(gens["xla"]) == 4
+        assert gens["xla"] == gens["reference"]  # greedy decode is backend-invariant
+
+    def test_build_cell_kernel_backend(self):
+        from repro.configs.base import SHAPES
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.steps import build_cell
+        from benchmarks.common import tiny_backbone
+
+        cfg = tiny_backbone()
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=2)
+        mesh = make_debug_mesh(1, 1)  # single CPU device
+        cell = build_cell(cfg, shape, mesh, kernel_backend="reference")
+        assert cell.kernel_backend == "reference"
+        assert cell.cfg.chimera.use_pallas and cell.cfg.chimera.backend == "reference"
+        assert cell.cfg.swa_backend == "reference"
+        cell_xla = build_cell(cfg, shape, mesh, kernel_backend="xla")
+        assert cell_xla.kernel_backend == "xla"
+        assert not cell_xla.cfg.chimera.use_pallas

@@ -18,10 +18,9 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _mesh11():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_debug_mesh
+
+    return make_debug_mesh(1, 1)
 
 
 class TestShardingRules:
@@ -102,16 +101,24 @@ SUBPROCESS_COMPRESSION = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import _mesh
     from repro.optim.grad_compression import compressed_mean
 
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = _mesh((8,), ("data",))
 
     def reduce_one(g, r):
         return compressed_mean(g, r, "data", bits=8)
 
-    f = jax.jit(jax.shard_map(reduce_one, mesh=mesh,
-        in_specs=(P("data"), P("data")), out_specs=(P(), P("data")),
-        check_vma=False))
+    if hasattr(jax, "shard_map"):  # newer jax
+        smap = jax.shard_map(reduce_one, mesh=mesh,
+            in_specs=(P("data"), P("data")), out_specs=(P(), P("data")),
+            check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map
+        smap = shard_map(reduce_one, mesh=mesh,
+            in_specs=(P("data"), P("data")), out_specs=(P(), P("data")),
+            check_rep=False)
+    f = jax.jit(smap)
     key = jax.random.PRNGKey(0)
     g_local = jax.random.normal(key, (8, 64))  # one row per shard
     r = jnp.zeros((8, 64))

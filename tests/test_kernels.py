@@ -99,6 +99,19 @@ class TestWindowKernel:
         ref = window_attention_ref(q, k, v, W)
         np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
 
+    @pytest.mark.parametrize("blk_q,blk_k", [(128, 64), (256, 64), (128, 32)])
+    def test_rectangular_tiles_match_ref(self, blk_q, blk_k):
+        # blk_q > blk_k: the band cover spans (window + blk_q)/blk_k kv blocks
+        BH, T, W, d = 2, 256, 128, 32
+        ksplit = jax.random.split(KEY, 3)
+        q = jax.random.normal(ksplit[0], (BH, T, d))
+        k = jax.random.normal(ksplit[1], (BH, T, d))
+        v = jax.random.normal(ksplit[2], (BH, T, d))
+        out = window_attention_pallas(
+            q, k, v, window=W, blk_q=blk_q, blk_k=blk_k, interpret=True)
+        ref = window_attention_ref(q, k, v, W)
+        np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
+
     def test_window_equals_full_when_covering(self):
         BH, T, d = 2, 128, 16
         ksplit = jax.random.split(KEY, 3)
