@@ -17,9 +17,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default="", help="comma-separated table names")
+    ap.add_argument("--skip", default="", help="comma-separated table names to skip")
     args = ap.parse_args()
 
-    from benchmarks import kernels_bench, tables
+    from benchmarks import kernels_bench, serve_bench, tables
 
     # classification benches run in the pre-saturation regime (the synthetic
     # proxy task saturates to F1=1.0 for every method given enough steps —
@@ -35,10 +36,14 @@ def main() -> None:
         "kernels": kernels_bench.kernel_benchmarks,
         "tilesweep": kernels_bench.tile_sweep,
         "serving": kernels_bench.serving_benchmarks,
+        "serve_flow": lambda: serve_bench.serve_flow_benchmarks(fast=args.fast),
     }
     if args.only:
         keep = set(args.only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}
+    if args.skip:
+        drop = set(args.skip.split(","))
+        suites = {k: v for k, v in suites.items() if k not in drop}
 
     print("name,us_per_call,derived")
     for name, fn in suites.items():

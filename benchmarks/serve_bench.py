@@ -1,0 +1,111 @@
+"""FlowEngine traffic-serving benchmarks.
+
+Streams :class:`FlowScenario` packet arrivals through the flow-table runtime
+and reports packets/sec, resident flows, and eviction rate per kernel
+backend.  Runs standalone (the CI smoke gate) or as the ``serve_flow`` suite
+of ``benchmarks.run``:
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --fast
+    PYTHONPATH=src python -m benchmarks.run --only serve_flow
+
+CSV: name,us_per_call,derived — us_per_call is wall-µs per packet.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, tiny_backbone
+from repro.data.pipeline import FlowScenario
+from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+from repro.train import classifier as C
+
+# backends runnable on this host; "xla" is the pure-jnp decode path, the
+# rest route the per-packet step through repro.kernels.dispatch
+_BACKENDS_FAST = ("xla", "reference")
+_BACKENDS_FULL = ("xla", "reference", "pallas-interpret") + (
+    ("pallas-tpu",) if jax.default_backend() == "tpu" else ()
+)
+
+_SCENARIOS_FAST = ("protocol-mix", "port-scan")
+_SCENARIOS_FULL = (
+    "protocol-mix", "port-scan", "burst", "heavy-churn", "rule-violating",
+)
+
+
+def _build():
+    # n_global=0 so the fused dispatch decode kernel is reachable (the
+    # global-match tier falls back to the jnp path otherwise)
+    import dataclasses
+
+    arch = tiny_backbone()
+    arch = dataclasses.replace(
+        arch, chimera=dataclasses.replace(arch.chimera, n_global=0)
+    )
+    ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256)
+    params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
+    return ccfg, params
+
+
+def serve_flow_benchmarks(fast: bool = False) -> List[str]:
+    rows: List[str] = []
+    backends = _BACKENDS_FAST if fast else _BACKENDS_FULL
+    scenarios = _SCENARIOS_FAST if fast else _SCENARIOS_FULL
+    batches = 3 if fast else 6
+    ccfg, params = _build()
+    for backend in backends:
+        eng = None  # one engine (one jitted step) per backend; reset per kind
+        for kind in scenarios:
+            sc = FlowScenario(
+                kind=kind, pkt_len=16,
+                packets_per_batch=128 if fast else 256, seed=7,
+            )
+            if eng is None:
+                rules = C.default_rules(ccfg, jnp.asarray(sc.anomaly_signature))
+                eng = FlowEngine(
+                    ccfg, params, rules,
+                    FlowEngineConfig(
+                        capacity=512 if fast else 2048,
+                        lanes=128 if fast else 256,
+                        backend=backend,
+                    ),
+                )
+            else:
+                eng.reset()
+            warm = sc.next_batch()  # compile outside the timed region
+            eng.ingest(warm["flow_ids"], warm["tokens"])
+            t0 = time.perf_counter()
+            pkts = 0
+            for _ in range(batches):
+                b = sc.next_batch()
+                eng.ingest(b["flow_ids"], b["tokens"])
+                pkts += len(b["flow_ids"])
+            dt = time.perf_counter() - t0
+            us_per_pkt = dt / max(pkts, 1) * 1e6
+            rows.append(csv_row(
+                f"serve/flow/{kind}/{backend}",
+                us_per_pkt,
+                f"pps={pkts/dt:.0f};resident={eng.resident_flows};"
+                f"flows={eng.stats.flows_created};"
+                f"evict_rate={eng.stats.eviction_rate:.2f};"
+                f"state_bytes={eng.resident_state_bytes()}",
+            ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in serve_flow_benchmarks(fast=args.fast):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

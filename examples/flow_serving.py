@@ -1,0 +1,86 @@
+"""Traffic serving quickstart: stream interleaved flows through the
+FlowEngine and watch the hard-rule veto fire on rule-violating flows.
+
+Builds a tiny Chimera traffic classifier, installs the anomaly-signature
+hard rule as the TCAM tier, then streams a mixed packet-arrival scenario
+(steady protocol mix + port scans + bursts + rule-violating flows) through
+the flow table.  Ends with a two-timescale control-plane swap: the soft-rule
+weight column is re-installed from a quantized SRAM table between ticks,
+without recompiling the jitted hot path.
+
+    PYTHONPATH=src python examples/flow_serving.py [--batches 8]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.quantization import FixedPointSpec
+from repro.core.symbolic import compile_weights_to_table
+from repro.data.pipeline import FlowScenario
+from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+from repro.train import classifier as C
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=1024)
+    ap.add_argument("--packets", type=int, default=128, help="packets per batch")
+    ap.add_argument("--scenario", default="mix")
+    args = ap.parse_args()
+
+    arch = dataclasses.replace(smoke_config("chimera-dataplane"), vocab_size=512)
+    ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256)
+    params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
+
+    scenario = FlowScenario(kind=args.scenario, pkt_len=16,
+                            packets_per_batch=args.packets, seed=0)
+    rules = C.default_rules(ccfg, jnp.asarray(scenario.anomaly_signature))
+    engine = FlowEngine(ccfg, params, rules,
+                        FlowEngineConfig(capacity=args.capacity, lanes=128))
+    print(f"flow table: {args.capacity} entries x "
+          f"{engine.per_flow_state_bytes()} B/flow = "
+          f"{engine.resident_state_bytes()/2**20:.1f} MiB "
+          f"(budget {engine.state_budget_bytes/2**20:.0f} MiB, Eq. 11)")
+
+    t0 = time.perf_counter()
+    pkts = 0
+    anom_flows, vetoed_flows = set(), set()
+    for i in range(args.batches):
+        batch = scenario.next_batch()
+        out = engine.ingest(batch["flow_ids"], batch["tokens"])
+        pkts += len(batch["flow_ids"])
+        anom_flows |= set(batch["flow_ids"][batch["anomalous"]].tolist())
+        vetoed_flows |= set(out["flow_ids"][out["vetoed"]].tolist())
+        assert (out["trust"][out["vetoed"]] == 1.0).all(), "Eq. 15 veto broken"
+    dt = time.perf_counter() - t0
+
+    s = engine.stats
+    print(f"served {pkts} packets from {s.flows_created} flows in {dt:.2f}s "
+          f"({pkts/dt:.0f} pkt/s; {s.rounds} jitted rounds)")
+    print(f"resident {engine.resident_flows}/{args.capacity} flows; "
+          f"evicted {s.flows_evicted} (rate {s.eviction_rate:.2f}/tick)")
+    if anom_flows:
+        caught = len(anom_flows & vetoed_flows)
+        false_vetoes = len(vetoed_flows - anom_flows)
+        print(f"hard veto caught {caught}/{len(anom_flows)} rule-violating "
+              f"flows, {false_vetoes} false veto(es) on benign flows; "
+              f"S = 1.0 exactly on every vetoed packet")
+
+    # two-timescale install: double the soft weights via a quantized table
+    w = np.asarray(rules.weights) * 2.0
+    table, spec = compile_weights_to_table(
+        jnp.asarray(w), FixedPointSpec(bits=16), budget_bits=w.size * 16)
+    rec = engine.swap_tables(weights=table, weight_spec=spec)
+    print(f"control-plane swap at tick {rec.tick}: install {rec.install_s*1e3:.2f}ms, "
+          f"no retrace of the jitted step")
+
+
+if __name__ == "__main__":
+    main()

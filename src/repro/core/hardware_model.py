@@ -72,6 +72,27 @@ def table_fits(n_entries: int, bits_per_entry: int, budget_bits: int) -> bool:
     return n_entries * bits_per_entry <= budget_bits
 
 
+def flow_table_bytes(n_flows: int, bytes_per_flow: int) -> int:
+    """Total resident bytes of a flow table holding ``n_flows`` entries."""
+    return n_flows * bytes_per_flow
+
+
+def check_flow_table_budget(
+    n_flows: int, bytes_per_flow: int, budget_bytes: int
+) -> int:
+    """Eq. 11 lifted to the whole flow table: N_flows × per-flow state must
+    fit the configured SRAM budget.  The per-flow term is the O(L·d + m·d_v)
+    bound (window buffer + (S, Z) accumulators + signature/bookkeeping);
+    raises ``ValueError`` on violation, returns total bytes otherwise."""
+    total = flow_table_bytes(n_flows, bytes_per_flow)
+    if total > budget_bytes:
+        raise ValueError(
+            f"flow table needs {total} B ({n_flows} flows x {bytes_per_flow} "
+            f"B/flow) > budget {budget_bytes} B (Eq. 11)"
+        )
+    return total
+
+
 def install_time_ok(delta_t_install_s: float, t_cp_s: float) -> bool:
     """Eq. 18: atomic install must complete within the control-plane epoch."""
     return delta_t_install_s < t_cp_s

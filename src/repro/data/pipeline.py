@@ -28,6 +28,40 @@ def _rng(seed: int, *stream: int) -> np.random.Generator:
     return np.random.default_rng(np.array([seed, *stream], dtype=np.uint64))
 
 
+def _traffic_tables(
+    seed: int, n_classes: int, vocab_size: int, hard_mode: bool
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Class-conditional token tables shared by PacketStream and FlowScenario:
+    (handshake (C,8), kernel (C,64,8), signature (C,4), anomaly_sig (4,)).
+    Draw order is load-bearing — it fixes the seeded streams."""
+    g = _rng(seed, 0xF10)
+    C = n_classes
+    handshake = g.integers(256, vocab_size, size=(C, 8))
+    kernel = g.integers(0, 256, size=(C, 64, 8))
+    signature = g.integers(256, vocab_size, size=(C, 4))
+    if hard_mode:
+        # shared handshake: the class is not readable from the prefix
+        handshake = np.broadcast_to(handshake[:1], (C, 8)).copy()
+    anomaly_sig = g.integers(256, vocab_size, size=(4,))
+    return handshake, kernel, signature, anomaly_sig
+
+
+def arrival_rounds(keys) -> "list[list[int]]":
+    """Partition arrival-ordered items into rounds where every key appears at
+    most once, preserving per-key order (round r holds each key's r-th
+    occurrence).  Used by FlowScenario generation and the FlowEngine ingest
+    path so same-flow packets are always processed sequentially."""
+    rounds: list = []
+    seen: Dict = {}
+    for i, k in enumerate(keys):
+        r = seen.get(k, 0)
+        seen[k] = r + 1
+        if r == len(rounds):
+            rounds.append([])
+        rounds[r].append(i)
+    return rounds
+
+
 @dataclasses.dataclass
 class TokenStream:
     vocab_size: int
@@ -104,17 +138,11 @@ class PacketStream:
     step: int = 0
 
     def __post_init__(self):
-        g = _rng(self.seed, 0xF10)
-        C = self.n_classes
-        self._handshake = g.integers(256, self.vocab_size, size=(C, 8))
-        self._kernel = g.integers(0, 256, size=(C, 64, 8))  # per-class chains
-        self._signature = g.integers(256, self.vocab_size, size=(C, 4))
-        if self.hard_mode:
-            # shared handshake: the class is not readable from the prefix;
-            # per-class chains and periodic signatures remain (learnable but
-            # not trivially, so method deltas stay visible pre-saturation)
-            self._handshake = np.broadcast_to(self._handshake[:1], (C, 8)).copy()
-        self._anomaly_sig = g.integers(256, self.vocab_size, size=(4,))
+        # hard mode keeps per-class chains and periodic signatures (learnable
+        # but not trivially, so method deltas stay visible pre-saturation)
+        self._handshake, self._kernel, self._signature, self._anomaly_sig = (
+            _traffic_tables(self.seed, self.n_classes, self.vocab_size, self.hard_mode)
+        )
 
     def state(self) -> Dict[str, int]:
         return {"step": self.step}
@@ -156,6 +184,189 @@ class PacketStream:
             "tokens": toks,
             "labels": labels.astype(np.int32),
             "anomalous": anomalous,
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+
+# --------------------------------------------------------------------------
+# Flow-level traffic scenarios (FlowEngine workload)
+# --------------------------------------------------------------------------
+
+# per-kind arrival shapes: steady protocol mixture, scan floods of one-packet
+# flows, periodic DDoS-style bursts of fresh flow IDs, short-lived churn, and
+# rule-violating flows carrying the anomaly signature
+SCENARIO_KINDS: Dict[str, Dict[str, float]] = {
+    "protocol-mix": dict(new_flows=16, mean_pkts=8, burst_every=0, burst_size=0,
+                         anomaly_rate=0.0),
+    "port-scan": dict(new_flows=128, mean_pkts=1, burst_every=0, burst_size=0,
+                      anomaly_rate=0.0),
+    "burst": dict(new_flows=8, mean_pkts=6, burst_every=4, burst_size=384,
+                  anomaly_rate=0.0),
+    "heavy-churn": dict(new_flows=64, mean_pkts=2, burst_every=0, burst_size=0,
+                        anomaly_rate=0.0),
+    "rule-violating": dict(new_flows=16, mean_pkts=8, burst_every=0,
+                           burst_size=0, anomaly_rate=0.5),
+}
+_MIX_CYCLE = (
+    "protocol-mix", "port-scan", "burst", "heavy-churn", "rule-violating",
+)
+
+
+@dataclasses.dataclass
+class FlowScenario:
+    """Interleaved packet-arrival stream over a churning population of flows.
+
+    Where :class:`PacketStream` emits whole flows as (B, T) batches, this
+    generator emits *packets*: each ``next_batch`` returns up to
+    ``packets_per_batch`` arrivals ``(flow_ids, tokens, labels, anomalous)``
+    drawn from the currently-active flow set, with new flows spawning and
+    finished flows retiring per the scenario ``kind`` (see
+    :data:`SCENARIO_KINDS`; ``"mix"`` cycles through all of them).  Flows
+    continue the same class-conditional token chains as PacketStream —
+    handshake prefix, per-class kernel, periodic signature markers — and
+    rule-violating flows inject the 4-token anomaly signature, so the same
+    :func:`repro.train.classifier.default_rules` hard rules fire on them.
+    """
+
+    kind: str = "protocol-mix"
+    n_classes: int = 8
+    vocab_size: int = 512
+    pkt_len: int = 16
+    packets_per_batch: int = 256
+    seed: int = 0
+    hard_mode: bool = False
+    max_flow_pkts: int = 64  # hard cap on flow length (keeps state bounded)
+    # cap on concurrently-active flows: burst kinds spawn faster than the
+    # packets_per_batch-bounded emission path retires, so without a ceiling
+    # the host-side flow dict grows for the generator's lifetime
+    max_active: int = 8192
+    step: int = 0
+
+    def __post_init__(self):
+        if self.kind != "mix" and self.kind not in SCENARIO_KINDS:
+            raise ValueError(
+                f"unknown scenario kind {self.kind!r}; "
+                f"expected 'mix' or one of {sorted(SCENARIO_KINDS)}"
+            )
+        self._handshake, self._kernel, self._signature, self._anomaly_sig = (
+            _traffic_tables(self.seed, self.n_classes, self.vocab_size, self.hard_mode)
+        )
+        self._next_fid = 0
+        # fid -> [label, chain_state, tok_pos, pkts_left, anomalous, anom_at]
+        self._active: Dict[int, list] = {}
+        self.flows_spawned = 0
+        self.flows_retired = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def anomaly_signature(self) -> np.ndarray:
+        return self._anomaly_sig
+
+    @property
+    def active_flows(self) -> int:
+        return len(self._active)
+
+    def _knobs(self) -> Dict[str, float]:
+        kind = self.kind
+        if kind == "mix":
+            kind = _MIX_CYCLE[self.step % len(_MIX_CYCLE)]
+        return SCENARIO_KINDS[kind]
+
+    def _spawn(self, g: np.random.Generator, n: int, anomaly_rate: float,
+               mean_pkts: float) -> None:
+        n = min(n, self.max_active - len(self._active))
+        for _ in range(n):
+            fid = self._next_fid
+            self._next_fid += 1
+            label = int(g.integers(0, self.n_classes))
+            state = int(g.integers(0, 64))
+            left = int(min(g.geometric(1.0 / max(mean_pkts, 1.0)), self.max_flow_pkts))
+            anom = bool(g.random() < anomaly_rate)
+            anom_at = 0
+            if anom:
+                # guarantee the signature burst lands inside the flow body
+                # without exceeding the max_flow_pkts hard cap; a cap too
+                # tight to carry the 4-token burst downgrades to benign
+                left = min(max(left, -(-24 // self.pkt_len)), self.max_flow_pkts)
+                if left * self.pkt_len >= 13:
+                    anom_at = int(g.integers(8, left * self.pkt_len - 4))
+                else:
+                    anom = False
+            self._active[fid] = [label, state, 0, left, anom, anom_at]
+            self.flows_spawned += 1
+
+    def _gen_tokens(self, g, labels, state, pos, anom, anom_at) -> Tuple[np.ndarray, np.ndarray]:
+        """Continue R flows by one packet each (vectorized over flows)."""
+        R, T = labels.shape[0], self.pkt_len
+        toks = np.empty((R, T), np.int32)
+        choice = g.integers(0, 8, size=(R, T))
+        for t in range(T):
+            a = pos + t  # absolute token position per flow
+            hs = self._handshake[labels, np.minimum(a, 7)]
+            sig = self._signature[labels, a % 4]
+            body = self._kernel[labels, state % 64, choice[:, t]]
+            tok = np.where(a < 8, hs, np.where(a % 17 == 0, sig, body))
+            inject = anom & (a >= anom_at) & (a < anom_at + 4)
+            tok = np.where(inject, self._anomaly_sig[np.clip(a - anom_at, 0, 3)], tok)
+            state = np.where(a >= 8, (state * 5 + tok) % 64, state)
+            toks[:, t] = tok
+        return toks, state
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        g = _rng(self.seed, 0xF70, self.step)
+        knobs = self._knobs()
+        n_new = int(knobs["new_flows"])
+        if knobs["burst_every"] and self.step % int(knobs["burst_every"]) == 0:
+            n_new += int(knobs["burst_size"])  # DDoS-style flood of fresh IDs
+        if not self._active and n_new == 0:
+            n_new = 1
+        self._spawn(g, n_new, float(knobs["anomaly_rate"]), float(knobs["mean_pkts"]))
+
+        # sample arrival lanes with replacement: the same flow may send
+        # several packets inside one batch (true interleaving)
+        ids = np.fromiter(self._active, dtype=np.int64, count=len(self._active))
+        lanes = ids[g.integers(0, len(ids), size=self.packets_per_batch)]
+        scheduled: Dict[int, int] = {}
+        emit: list = []
+        for fid in lanes.tolist():
+            if scheduled.get(fid, 0) < self._active[fid][3]:
+                scheduled[fid] = scheduled.get(fid, 0) + 1
+                emit.append(fid)
+        P = len(emit)
+        tokens = np.empty((P, self.pkt_len), np.int32)
+        labels = np.empty((P,), np.int32)
+        anomalous = np.zeros((P,), bool)
+        first = np.zeros((P,), bool)
+        for round_lanes in arrival_rounds(emit):
+            sub = [emit[i] for i in round_lanes]
+            st = np.array([self._active[f] for f in sub], dtype=np.int64)
+            lab, state, pos = st[:, 0], st[:, 1], st[:, 2]
+            toks, state = self._gen_tokens(
+                g, lab, state, pos, st[:, 4].astype(bool), st[:, 5]
+            )
+            for j, f in enumerate(sub):
+                rec = self._active[f]
+                rec[1] = int(state[j])
+                rec[2] = int(pos[j]) + self.pkt_len
+                rec[3] -= 1
+                idx = round_lanes[j]
+                tokens[idx] = toks[j]
+                labels[idx] = rec[0]
+                anomalous[idx] = rec[4]
+                first[idx] = pos[j] == 0
+        for fid in [f for f, rec in self._active.items() if rec[3] <= 0]:
+            del self._active[fid]
+            self.flows_retired += 1
+        self.step += 1
+        return {
+            "flow_ids": np.asarray(emit, np.int64),
+            "tokens": tokens,
+            "labels": labels,
+            "anomalous": anomalous,
+            "first_packet": first,
         }
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:

@@ -332,16 +332,20 @@ def _block_decode(cfg: ArchConfig, kind: str, bp: Params, x_t, position, cache):
     return x_t, cache
 
 
-def decode_step(
+def decode_hidden_step(
     cfg: ArchConfig,
     params: Params,
     token: jax.Array,  # (B,) int32
     position: jax.Array,  # (B,) int32
     caches,
 ) -> Tuple[jax.Array, Any]:
-    """One non-iterative serve step: (B,) token -> (B, V) logits."""
+    """One streaming step to the final-norm hidden state: (B,) -> (B, d).
+
+    The feature-consumer twin of :func:`decode_step` — identical state
+    transition, no LM head.  The traffic FlowEngine pools these per-flow
+    features for the classifier/anomaly heads (decoder-only archs)."""
     if cfg.encoder_layers:
-        return _encdec_decode_step(cfg, params, token, position, caches)
+        raise NotImplementedError("hidden-state decode is decoder-only")
     x = embed(params["embed"], token[:, None]).astype(_dtype(cfg))
 
     def body(x, xs):
@@ -353,7 +357,21 @@ def decode_step(
 
     x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
     x = apply_norm(params["final_norm"], x, cfg.norm_type)
-    logits = _head(cfg, params, x)[:, 0]
+    return x[:, 0], new_caches
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Params,
+    token: jax.Array,  # (B,) int32
+    position: jax.Array,  # (B,) int32
+    caches,
+) -> Tuple[jax.Array, Any]:
+    """One non-iterative serve step: (B,) token -> (B, V) logits."""
+    if cfg.encoder_layers:
+        return _encdec_decode_step(cfg, params, token, position, caches)
+    x, new_caches = decode_hidden_step(cfg, params, token, position, caches)
+    logits = _head(cfg, params, x[:, None])[:, 0]
     return logits, new_caches
 
 

@@ -111,8 +111,12 @@ class ServeEngine:
                 continue
             if self.temperature > 0:
                 self.key, sub = jax.random.split(self.key)
-                probs = jax.nn.softmax(jnp.asarray(logits[i]) / self.temperature)
-                nxt = int(jax.random.choice(sub, logits.shape[-1], p=probs))
+                # sample over the real vocab only: the head is padded to
+                # padded_vocab and softmaxing the full row can emit pad ids
+                probs = jax.nn.softmax(
+                    jnp.asarray(logits[i][: self.cfg.vocab_size]) / self.temperature
+                )
+                nxt = int(jax.random.choice(sub, self.cfg.vocab_size, p=probs))
             else:
                 nxt = int(np.argmax(logits[i][: self.cfg.vocab_size]))
             req.generated.append(nxt)
@@ -132,6 +136,12 @@ class ServeEngine:
             if not self.pending and all(r is None for r in self.active):
                 return
             self.step()
+        left = len(self.pending) + sum(r is not None for r in self.active)
+        if left:
+            raise RuntimeError(
+                f"run_until_done: {left} request(s) still unfinished after "
+                f"{max_ticks} ticks (raise max_ticks or check eos/length caps)"
+            )
 
     # ------------------------------------------------------------------
     def prefill_batch(self, requests) -> None:

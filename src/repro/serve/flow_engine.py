@@ -1,0 +1,423 @@
+"""Flow-table streaming inference runtime (DESIGN.md §10).
+
+The serving-side realization of Algorithm 1 for the paper's *traffic*
+workload: a flow-keyed table maps 5-tuple-style flow IDs to bounded
+per-flow Chimera state — the Eq. 11/13 O(L·d + m·d_v) decode state plus the
+streaming classifier aggregates (running pooled features, cumulative packed
+marker signature, sticky TCAM veto bit).  ``ingest(flow_ids, tokens)``
+batches every touched flow through ONE jitted classifier step per arrival
+round (same-flow packets are serialized by :func:`arrival_rounds`; distinct
+flows vectorize), so millions of interleaved flows stream through a single
+compiled program regardless of arrival order.
+
+Trust on the hot path: every packet's cumulative signature is ternary-matched
+against the installed :class:`RuleSet`; a hard TCAM hit marks the flow
+*vetoed* for its lifetime and cascade fusion (Eq. 15) then pins S = 1
+regardless of the neural score.
+
+Two timescales: the data plane only ever *reads* the compiled tables inside
+the jitted step; the control plane calls :meth:`FlowEngine.swap_tables`
+between ticks to atomically install a new RuleSet / quantized SRAM weight
+table.  Installs are shape-checked so the hot path never retraces (Eq. 18).
+
+State is bounded twice over: per-flow by construction (Chimera decode state
+never grows with flow length) and table-wide by an explicit byte budget
+(:func:`repro.core.hardware_model.check_flow_table_budget`) with LRU and
+idle eviction keeping the resident set inside ``capacity``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hardware_model
+from repro.core import symbolic
+from repro.core.hardware_model import DEFAULT_DATAPLANE
+from repro.data.pipeline import arrival_rounds
+from repro.models import model as M
+from repro.train import classifier as C
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowEngineConfig:
+    capacity: int = 4096  # max resident flows (table entries)
+    lanes: int = 256  # jit batch width per arrival round (padded, fixed)
+    state_budget_bytes: int = 0  # 0 → DataplaneSpec shared-SRAM default
+    idle_timeout: int = 0  # ticks without traffic before eviction (0 = off)
+    max_flow_tokens: int = 1024  # KV length for non-Chimera archs only
+    t_cp_s: float = 0.0  # control-plane epoch for Eq. 18 checks (0 = off)
+    backend: Optional[str] = None  # kernel backend ("xla" | dispatch name)
+
+
+@dataclasses.dataclass
+class FlowStats:
+    packets: int = 0
+    tokens: int = 0
+    ticks: int = 0
+    rounds: int = 0
+    flows_created: int = 0
+    flows_evicted_lru: int = 0
+    flows_evicted_idle: int = 0
+
+    @property
+    def flows_evicted(self) -> int:
+        return self.flows_evicted_lru + self.flows_evicted_idle
+
+    @property
+    def eviction_rate(self) -> float:
+        """Evictions per engine tick — the flow-churn pressure metric."""
+        return self.flows_evicted / max(self.ticks, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapRecord:
+    tick: int
+    install_s: float
+    churn_ok: bool  # Eq. 18: install completed within the control epoch
+
+
+class FlowEngine:
+    """Streaming per-flow classification over a bounded flow table."""
+
+    def __init__(
+        self,
+        ccfg: C.ClassifierConfig,
+        params,
+        rules: symbolic.RuleSet,
+        fcfg: FlowEngineConfig = FlowEngineConfig(),
+    ):
+        from repro.kernels.dispatch import apply_kernel_backend
+
+        arch, self.backend = apply_kernel_backend(ccfg.arch, fcfg.backend)
+        self.ccfg = dataclasses.replace(ccfg, arch=arch)
+        self.fcfg = fcfg
+        self.params = params
+        self.rules = rules
+        self.stats = FlowStats()
+        self.swap_history: List[SwapRecord] = []
+
+        # slot-batched state: capacity real slots + one scratch slot that
+        # absorbs padding lanes (index == capacity)
+        self._n_slots = fcfg.capacity + 1
+        self.caches = M.init_caches(
+            arch, self._n_slots, fcfg.max_flow_tokens, dtype=jnp.float32
+        )
+        W, d = ccfg.sig_words, arch.d_model
+        self.positions = jnp.zeros((self._n_slots,), jnp.int32)
+        self.sig = jnp.zeros((self._n_slots, W), jnp.uint32)
+        self.hidden_sum = jnp.zeros((self._n_slots, d), jnp.float32)
+        self.vetoed = jnp.zeros((self._n_slots,), bool)
+
+        # host-side table bookkeeping
+        self._slot_of: Dict[int, int] = {}
+        self._fid_of: Dict[int, int] = {}
+        self._free: List[int] = list(range(fcfg.capacity - 1, -1, -1))
+        self._last_seen = np.full((fcfg.capacity,), np.iinfo(np.int64).max, np.int64)
+        self._tick = 0
+
+        # Eq. 11 budget check, enforced at construction so an over-provisioned
+        # table cannot even be built; the check covers everything actually
+        # allocated (capacity entries + the scratch lane)
+        budget = fcfg.state_budget_bytes or DEFAULT_DATAPLANE.sram_total_bits // 8
+        self.state_budget_bytes = budget
+        hardware_model.check_flow_table_budget(
+            self._n_slots, self.per_flow_state_bytes(), budget
+        )
+
+        self._jit_step = jax.jit(
+            self._make_step(), donate_argnums=(2, 3, 4, 5, 6)
+        )
+
+    # ------------------------------------------------------------------
+    # state accounting
+    # ------------------------------------------------------------------
+    def per_flow_state_bytes(self) -> int:
+        """Actual bytes of one flow-table entry: Chimera decode state
+        (Eq. 11/13: S, Z, ring buffers, fill count) + classifier aggregates
+        (signature words, pooled-feature accumulator, counters, veto bit)."""
+        cache_bytes = sum(
+            leaf.nbytes // self._n_slots
+            for leaf in jax.tree_util.tree_leaves(self.caches)
+        )
+        aux = (
+            self.sig.nbytes
+            + self.hidden_sum.nbytes
+            + self.positions.nbytes
+            + self.vetoed.nbytes
+        ) // self._n_slots
+        return cache_bytes + aux + 8  # + host LRU timestamp
+
+    def resident_state_bytes(self) -> int:
+        """Total allocated flow-table bytes (capacity + the scratch lane) —
+        constant under churn because nothing is allocated per-packet."""
+        return hardware_model.flow_table_bytes(
+            self._n_slots, self.per_flow_state_bytes()
+        )
+
+    @property
+    def resident_flows(self) -> int:
+        return len(self._slot_of)
+
+    def flow_ids(self) -> List[int]:
+        return list(self._slot_of)
+
+    # ------------------------------------------------------------------
+    # jitted hot path
+    # ------------------------------------------------------------------
+    def _make_step(self):
+        ccfg = self.ccfg
+        arch = ccfg.arch
+        n_slots = self._n_slots
+
+        def slotted(c) -> bool:
+            return c.ndim >= 2 and c.shape[1] == n_slots
+
+        def step(params, rules, caches, positions, sig, hidden_sum, vetoed,
+                 idx, tokens, fresh):
+            # gather the touched rows; zero lanes holding newly-alloc'd flows
+            # (slot reuse after eviction must look like a fresh table entry)
+            def take(c):
+                if not slotted(c):
+                    return c
+                f = fresh.reshape((1, -1) + (1,) * (c.ndim - 2))
+                return jnp.where(f, jnp.zeros_like(c[:, idx]), c[:, idx])
+
+            cs = jax.tree_util.tree_map(take, caches)
+            pos = jnp.where(fresh, 0, positions[idx])
+            sg = jnp.where(fresh[:, None], jnp.uint32(0), sig[idx])
+            hs = jnp.where(fresh[:, None], 0.0, hidden_sum[idx])
+            vt = jnp.where(fresh, False, vetoed[idx])
+
+            def body(carry, tok_t):
+                cs, pos, hs = carry
+                h, cs = M.decode_hidden_step(arch, params["backbone"], tok_t, pos, cs)
+                return (cs, pos + 1, hs + h.astype(jnp.float32)), None
+
+            (cs, pos, hs), _ = jax.lax.scan(body, (cs, pos, hs), tokens.T)
+            sg = sg | C.packet_signature(ccfg, tokens)
+            pooled = hs / jnp.maximum(pos, 1)[:, None].astype(jnp.float32)
+            out, vt = C.streaming_scores(ccfg, params, rules, pooled, sg, vt)
+
+            def put(c, u):
+                return c.at[:, idx].set(u) if slotted(c) else c
+
+            caches = jax.tree_util.tree_map(put, caches, cs)
+            positions = positions.at[idx].set(pos)
+            sig = sig.at[idx].set(sg)
+            hidden_sum = hidden_sum.at[idx].set(hs)
+            vetoed = vetoed.at[idx].set(vt)
+            return caches, positions, sig, hidden_sum, vetoed, out
+
+        return step
+
+    # ------------------------------------------------------------------
+    # flow-table bookkeeping (host side)
+    # ------------------------------------------------------------------
+    def _slot_for(self, fid: int) -> Tuple[int, bool]:
+        slot = self._slot_of.get(fid)
+        if slot is not None:
+            self._last_seen[slot] = self._tick
+            return slot, False
+        if self._free:
+            slot = self._free.pop()
+        else:
+            slot = int(np.argmin(self._last_seen))  # LRU victim
+            del self._slot_of[self._fid_of[slot]]
+            self.stats.flows_evicted_lru += 1
+        self._slot_of[fid] = slot
+        self._fid_of[slot] = fid
+        self._last_seen[slot] = self._tick
+        self.stats.flows_created += 1
+        return slot, True
+
+    def reset(self) -> None:
+        """Clear the flow table without touching the jitted step.
+
+        Drops every resident flow and zeroes the stats; device state is NOT
+        rewritten — reused slots are lazily zeroed by the per-lane ``fresh``
+        flag, so a reset engine keeps its compiled hot path (benchmarks
+        sweep scenarios on one engine instead of re-jitting per scenario)."""
+        self._slot_of.clear()
+        self._fid_of.clear()
+        self._free = list(range(self.fcfg.capacity - 1, -1, -1))
+        self._last_seen[:] = np.iinfo(np.int64).max
+        self._tick = 0
+        self.stats = FlowStats()
+
+    def evict(self, fid: int) -> bool:
+        """Drop a flow's table entry (state is lazily zeroed on slot reuse)."""
+        slot = self._slot_of.pop(fid, None)
+        if slot is None:
+            return False
+        del self._fid_of[slot]
+        self._last_seen[slot] = np.iinfo(np.int64).max
+        self._free.append(slot)
+        return True
+
+    def evict_idle(self) -> int:
+        """Evict flows idle for more than ``idle_timeout`` ticks."""
+        if not self.fcfg.idle_timeout:
+            return 0
+        horizon = self._tick - self.fcfg.idle_timeout
+        stale = [f for f, s in self._slot_of.items() if self._last_seen[s] < horizon]
+        for fid in stale:
+            self.evict(fid)
+            self.stats.flows_evicted_idle += 1
+        return len(stale)
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
+    def ingest(self, flow_ids: np.ndarray, tokens: np.ndarray) -> Dict[str, np.ndarray]:
+        """Stream one batch of packet arrivals through the flow table.
+
+        ``flow_ids`` (P,) int — flow keys in arrival order (repeats allowed:
+        same-flow packets are processed sequentially, distinct flows in
+        parallel); ``tokens`` (P, pkt_len) int32.  Returns per-packet outputs
+        aligned with the input order: ``trust``, ``vetoed``, ``pred``,
+        ``s_nn``, ``s_sym`` reflecting each flow's state *after* its packet.
+        """
+        flow_ids = np.asarray(flow_ids)
+        tokens = np.asarray(tokens, np.int32)
+        P, pkt_len = tokens.shape
+        assert flow_ids.shape == (P,), (flow_ids.shape, P)
+        self._tick += 1
+        self.stats.ticks += 1
+
+        # touch every already-resident flow in this batch BEFORE the idle
+        # sweep and any allocation: eviction victims (idle or LRU) must come
+        # from flows with no packets pending here, or a resident (possibly
+        # vetoed) flow could lose its state on the very tick it transmits.
+        # Only when the batch itself holds more distinct flows than the
+        # table has entries is evicting an in-batch flow unavoidable (state
+        # loss on eviction is inherent to a bounded table).
+        for fid in set(flow_ids.tolist()):
+            slot = self._slot_of.get(fid)
+            if slot is not None:
+                self._last_seen[slot] = self._tick
+        self.evict_idle()
+
+        slots = np.empty((P,), np.int32)
+        fresh = np.zeros((P,), bool)
+        for i, fid in enumerate(flow_ids.tolist()):
+            slots[i], fresh[i] = self._slot_for(fid)
+
+        out_trust = np.empty((P,), np.float32)
+        out_veto = np.empty((P,), bool)
+        out_pred = np.empty((P,), np.int32)
+        out_s_nn = np.empty((P,), np.float32)
+        out_s_sym = np.empty((P,), np.float32)
+
+        lanes = self.fcfg.lanes
+        scratch = self.fcfg.capacity
+        for round_lanes in arrival_rounds(slots.tolist()):
+            for c0 in range(0, len(round_lanes), lanes):
+                chunk = round_lanes[c0 : c0 + lanes]
+                idx = np.full((lanes,), scratch, np.int32)
+                tok = np.zeros((lanes, pkt_len), np.int32)
+                fr = np.zeros((lanes,), bool)
+                n = len(chunk)
+                idx[:n] = slots[chunk]
+                tok[:n] = tokens[chunk]
+                fr[:n] = fresh[chunk]
+                (self.caches, self.positions, self.sig, self.hidden_sum,
+                 self.vetoed, out) = self._jit_step(
+                    self.params, self.rules, self.caches, self.positions,
+                    self.sig, self.hidden_sum, self.vetoed,
+                    jnp.asarray(idx), jnp.asarray(tok), jnp.asarray(fr),
+                )
+                self.stats.rounds += 1
+                lanes_idx = np.asarray(chunk, np.intp)
+                out_trust[lanes_idx] = np.asarray(out["trust"], np.float32)[:n]
+                out_veto[lanes_idx] = np.asarray(out["hard_hit"])[:n]
+                out_pred[lanes_idx] = np.asarray(
+                    jnp.argmax(out["class_logits"], -1), np.int32
+                )[:n]
+                out_s_nn[lanes_idx] = np.asarray(out["s_nn"], np.float32)[:n]
+                out_s_sym[lanes_idx] = np.asarray(out["s_sym"], np.float32)[:n]
+        self.stats.packets += P
+        self.stats.tokens += P * pkt_len
+        return {
+            "flow_ids": flow_ids,
+            "trust": out_trust,
+            "vetoed": out_veto,
+            "pred": out_pred,
+            "s_nn": out_s_nn,
+            "s_sym": out_s_sym,
+        }
+
+    # ------------------------------------------------------------------
+    # per-flow snapshot
+    # ------------------------------------------------------------------
+    def flow_scores(self, fid: int) -> Dict[str, float]:
+        """Current scores for a resident flow (control-plane read path)."""
+        slot = self._slot_of[fid]
+        pooled = self.hidden_sum[slot] / jnp.maximum(self.positions[slot], 1)
+        out, _ = C.streaming_scores(
+            self.ccfg, self.params, self.rules,
+            pooled[None], self.sig[slot][None], self.vetoed[slot][None],
+        )
+        return {
+            "trust": float(out["trust"][0]),
+            "vetoed": bool(out["hard_hit"][0]),
+            "pred": int(jnp.argmax(out["class_logits"][0])),
+            "s_nn": float(out["s_nn"][0]),
+            "s_sym": float(out["s_sym"][0]),
+            "tokens": int(self.positions[slot]),
+        }
+
+    # ------------------------------------------------------------------
+    # two-timescale control-plane hook
+    # ------------------------------------------------------------------
+    def swap_tables(
+        self,
+        ruleset: Optional[symbolic.RuleSet] = None,
+        weights: Optional[jax.Array] = None,
+        weight_spec=None,
+    ) -> SwapRecord:
+        """Atomically install new compiled tables between ticks (§3.6).
+
+        ``ruleset`` replaces the whole TCAM/SRAM rule table; ``weights``
+        replaces only the soft-rule weight column — pass a float array, or a
+        quantized SRAM table plus its ``FixedPointSpec`` as ``weight_spec``
+        (decompiled on install, Eq. 19's table encoding).  Shapes and dtypes
+        must match the installed tables so the jitted ingest step is reused
+        verbatim — a swap never recompiles the hot path.
+        """
+        t0 = time.perf_counter()
+        new = ruleset if ruleset is not None else self.rules
+        if weights is not None:
+            w = (
+                symbolic.decompile_table(weights, weight_spec)
+                if weight_spec is not None
+                else jnp.asarray(weights, jnp.float32)
+            )
+            new = symbolic.RuleSet(
+                values=new.values, masks=new.masks,
+                weights=w.astype(jnp.float32), hard=new.hard,
+            )
+        old = self.rules
+        for name in ("values", "masks", "weights", "hard"):
+            a, b = getattr(old, name), getattr(new, name)
+            if a.shape != b.shape or a.dtype != b.dtype:
+                raise ValueError(
+                    f"swap_tables: {name} {b.shape}/{b.dtype} does not match "
+                    f"installed {a.shape}/{a.dtype}; shape-changing installs "
+                    f"would retrace the hot path (rebuild the engine instead)"
+                )
+        self.rules = new
+        dt = time.perf_counter() - t0
+        ok = (
+            hardware_model.install_time_ok(dt, self.fcfg.t_cp_s)
+            if self.fcfg.t_cp_s
+            else True
+        )
+        rec = SwapRecord(tick=self._tick, install_s=dt, churn_ok=ok)
+        self.swap_history.append(rec)
+        return rec

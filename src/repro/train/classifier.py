@@ -73,6 +73,39 @@ def packet_signature(ccfg: ClassifierConfig, tokens: jax.Array) -> jax.Array:
     return jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)
 
 
+def streaming_scores(
+    ccfg: ClassifierConfig,
+    params,
+    rules: symbolic.RuleSet,
+    pooled: jax.Array,  # (B, d) running mean of final-norm hidden states
+    sig: jax.Array,  # (B, W) cumulative packed marker signature
+    sticky_hard: jax.Array,  # (B,) bool — flows already vetoed by TCAM
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Score flows from streaming aggregates (the FlowEngine hot path).
+
+    Mirrors :func:`classifier_forward` exactly — same heads, same TCAM
+    ternary match, same cascade fusion (Eq. 15) — but over per-flow running
+    aggregates instead of a whole (B, T) batch.  The hard veto is *sticky*:
+    a cumulative signature can stop matching a ternary rule once more
+    marker bits accumulate (masked zero-bits), but a flow that ever hit a
+    hard rule stays vetoed for its lifetime.  Returns (outputs, new_sticky)."""
+    class_logits = dense(params["cls"], pooled)
+    s_nn = dense(params["anom"], pooled)[..., 0]
+    hits = symbolic.ternary_match(sig, rules)
+    hard = symbolic.hard_hit(hits, rules) | sticky_hard
+    s_sym = symbolic.soft_score(hits, rules)
+    trust = fusion_mod.cascade_fusion(
+        params["fusion"], s_nn, s_sym, hard, lambda_h=ccfg.lambda_h
+    )
+    return {
+        "class_logits": class_logits,
+        "s_nn": s_nn,
+        "s_sym": s_sym,
+        "hard_hit": hard,
+        "trust": trust,
+    }, hard
+
+
 def classifier_forward(
     ccfg: ClassifierConfig,
     params,

@@ -1,6 +1,76 @@
+import dataclasses
 import os
 import sys
+
+import pytest
 
 # tests run on the single real CPU device (the dry-run's 512-device flag is
 # process-scoped and only set by subprocess-based tests)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# --------------------------------------------------------------------------
+# shared tiny builders (promoted from per-file duplicates): one reduced
+# chimera-dataplane arch + classifier config and a RuleSet factory, used by
+# the serving, classifier, trust-property and smoke tiers
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def tiny_arch():
+    """Reduced chimera-dataplane ArchConfig.  vocab 512: the packet streams
+    use tokens 0..255 (bytes) + 256..511 (field markers), so the classifier
+    arch must cover the marker range."""
+    from repro.configs import smoke_config
+
+    return dataclasses.replace(
+        smoke_config("chimera-dataplane"),
+        n_layers=2, d_model=32, d_ff=64, n_heads=2, n_kv_heads=2, d_head=16,
+        vocab_size=512,
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_classifier_cfg(tiny_arch):
+    from repro.train.classifier import ClassifierConfig
+
+    return ClassifierConfig(arch=tiny_arch, n_classes=8, marker_base=256)
+
+
+@pytest.fixture(scope="session")
+def make_ruleset():
+    """RuleSet factory with sane dtype coercion: make(values, masks,
+    weights=1.0 each, hard=all-False unless given)."""
+    import jax.numpy as jnp
+
+    from repro.core.symbolic import RuleSet
+
+    def make(values, masks, weights=None, hard=None):
+        values = jnp.asarray(values, jnp.uint32)
+        masks = jnp.asarray(masks, jnp.uint32)
+        M = values.shape[0]
+        w = jnp.ones((M,)) if weights is None else jnp.asarray(weights, jnp.float32)
+        h = (
+            jnp.zeros((M,), bool)
+            if hard is None
+            else jnp.asarray(hard, bool)
+        )
+        return RuleSet(values=values, masks=masks, weights=w, hard=h)
+
+    return make
+
+
+@pytest.fixture(scope="session")
+def batch_for():
+    """Synthetic (tokens, labels[, enc_embeds]) batch builder for any arch."""
+    import jax
+
+    key = jax.random.PRNGKey(0)
+
+    def f(cfg, B=2, T=32):
+        tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        if cfg.encoder_layers:
+            batch["enc_embeds"] = jax.random.normal(key, (B, T, cfg.d_model))
+        return batch
+
+    return f

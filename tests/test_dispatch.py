@@ -217,6 +217,7 @@ class TestAutotune:
 
 
 class TestEndToEndBackendSelection:
+    @pytest.mark.slow
     def test_chimera_config_backend_reaches_dispatch(self):
         from repro.core import chimera_attention as ca
         from repro.core.feature_maps import FeatureMapConfig
@@ -236,6 +237,7 @@ class TestEndToEndBackendSelection:
             out_b = ca.chimera_attention(cfg_b, params, q, k, v)
             np.testing.assert_allclose(out_b, out_xla, atol=2e-4, rtol=2e-4)
 
+    @pytest.mark.slow
     def test_fused_decode_step_matches_jnp_path(self):
         from repro.core import chimera_attention as ca
         from repro.core.feature_maps import FeatureMapConfig
@@ -261,6 +263,7 @@ class TestEndToEndBackendSelection:
         np.testing.assert_allclose(s1.S, s2.S, atol=1e-4)
         np.testing.assert_allclose(np.asarray(s1.count), np.asarray(s2.count))
 
+    @pytest.mark.slow
     def test_swa_dispatch_matches_banded_softmax(self):
         from benchmarks.common import tiny_backbone
         from repro.models import attention as A
@@ -277,6 +280,7 @@ class TestEndToEndBackendSelection:
         o_disp = A.attention_layer(cfg_disp, params, x, pos)
         np.testing.assert_allclose(o_xla, o_disp, atol=2e-4, rtol=2e-4)
 
+    @pytest.mark.slow
     def test_serve_engine_backend_param(self):
         from benchmarks.common import tiny_backbone
         from repro.models import model as M

@@ -1,0 +1,307 @@
+"""FlowEngine runtime: interleaved-vs-sequential equivalence, budget-bounded
+eviction, hard-veto on the hot path (Eq. 15), two-timescale table swaps
+without retracing, and traffic-scale flow churn (slow tier)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import FlowScenario, arrival_rounds
+from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+from repro.train import classifier as C
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def classifier(tiny_classifier_cfg):
+    params, _ = C.init_classifier(tiny_classifier_cfg, KEY)
+    return tiny_classifier_cfg, params
+
+
+def _engine(classifier, rules=None, **fkw):
+    ccfg, params = classifier
+    if rules is None:
+        rules = C.default_rules(ccfg, jnp.asarray([400, 401, 402, 403]))
+    fkw.setdefault("capacity", 16)
+    fkw.setdefault("lanes", 8)
+    return FlowEngine(ccfg, params, rules, FlowEngineConfig(**fkw))
+
+
+class TestArrivalRounds:
+    def test_rounds_are_duplicate_free_and_order_preserving(self):
+        keys = [5, 7, 5, 5, 9, 7]
+        rounds = arrival_rounds(keys)
+        assert rounds == [[0, 1, 4], [2, 5], [3]]
+        for r in rounds:
+            assert len({keys[i] for i in r}) == len(r)
+
+
+class TestFlowScenario:
+    def test_max_flow_pkts_is_a_hard_cap(self):
+        sc = FlowScenario(kind="rule-violating", pkt_len=16,
+                          packets_per_batch=64, seed=1, max_flow_pkts=2)
+        counts = {}
+        for _ in range(6):
+            b = sc.next_batch()
+            for fid in b["flow_ids"].tolist():
+                counts[fid] = counts.get(fid, 0) + 1
+        assert max(counts.values()) <= 2  # anomaly bump must not exceed cap
+
+    def test_cap_too_tight_for_signature_downgrades_to_benign(self):
+        sc = FlowScenario(kind="rule-violating", pkt_len=8,
+                          packets_per_batch=64, seed=1, max_flow_pkts=1)
+        for _ in range(4):
+            assert not sc.next_batch()["anomalous"].any()
+
+    def test_burst_active_population_bounded(self):
+        """Burst kinds spawn faster than retirement; the active flow set
+        must saturate at max_active, not grow for the generator's life."""
+        sc = FlowScenario(kind="burst", pkt_len=8, packets_per_batch=64,
+                          seed=2, max_active=500)
+        for _ in range(12):
+            sc.next_batch()
+            assert sc.active_flows <= 500
+        assert sc.active_flows >= 400  # saturated near the cap, still serving
+
+    def test_wide_marker_vocab_needs_matching_sig_words(self, tiny_arch):
+        """packet_signature must give every marker its own TCAM bit when
+        sig_words covers the vocab (the flow_serve driver derives it)."""
+        import dataclasses as dc
+
+        arch = dc.replace(tiny_arch, vocab_size=1024)
+        ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256,
+                                  sig_words=-(-(1024 - 256) // 32))
+        toks = jnp.asarray([[600, 0, 0, 0], [1023, 0, 0, 0]], jnp.int32)
+        sig = C.packet_signature(ccfg, toks)
+        bits = np.unpackbits(
+            np.asarray(sig).view(np.uint8), axis=-1, bitorder="little"
+        )
+        np.testing.assert_array_equal(np.nonzero(bits[0])[0], [600 - 256])
+        np.testing.assert_array_equal(np.nonzero(bits[1])[0], [1023 - 256])
+
+
+class TestEquivalence:
+    def test_interleaved_equals_sequential_replay(self, classifier):
+        """Same per-flow scores whether packets arrive interleaved (with
+        same-flow repeats inside one ingest call) or one flow at a time."""
+        rng = np.random.default_rng(0)
+        pkt = 8
+        flows = {f: rng.integers(0, 512, (3, pkt)).astype(np.int32) for f in range(3)}
+        order = [(0, 0), (1, 0), (2, 0), (0, 1), (1, 1), (0, 2), (2, 1), (1, 2), (2, 2)]
+        fids = np.array([f for f, _ in order])
+        toks = np.stack([flows[f][p] for f, p in order])
+
+        eng = _engine(classifier)
+        eng.ingest(fids[:5], toks[:5])
+        eng.ingest(fids[5:], toks[5:])
+        interleaved = {f: eng.flow_scores(f) for f in flows}
+
+        for f, pkts in flows.items():
+            solo = _engine(classifier)
+            solo.ingest(np.full((3,), f), pkts)
+            seq = solo.flow_scores(f)
+            for k, v in seq.items():
+                np.testing.assert_allclose(
+                    interleaved[f][k], v, atol=1e-6,
+                    err_msg=f"flow {f} key {k} diverged",
+                )
+
+    def test_streaming_matches_batch_classifier(self, classifier):
+        """Per-packet streaming over the decode path reproduces the batch
+        classifier_forward on the concatenated flow (same pooled features,
+        same signature, same fusion) to decode-vs-forward tolerance."""
+        ccfg, params = classifier
+        L = ccfg.arch.chimera.chunk_size
+        n_pkts, pkt = 4, L // 2  # total tokens divisible by the chunk size
+        rng = np.random.default_rng(1)
+        toks = rng.integers(0, 512, (n_pkts, pkt)).astype(np.int32)
+
+        eng = _engine(classifier)
+        eng.ingest(np.zeros((n_pkts,), np.int64), toks)
+        stream = eng.flow_scores(0)
+
+        batch = {"tokens": jnp.asarray(toks.reshape(1, -1))}
+        rules = C.default_rules(ccfg, jnp.asarray([400, 401, 402, 403]))
+        out = C.classifier_forward(ccfg, params, rules, batch)
+        np.testing.assert_allclose(stream["s_nn"], out["s_nn"][0], atol=2e-3)
+        np.testing.assert_allclose(stream["trust"], out["trust"][0], atol=2e-3)
+        assert stream["vetoed"] == bool(out["hard_hit"][0])
+
+
+class TestBoundedState:
+    def test_eviction_keeps_table_at_capacity(self, classifier):
+        eng = _engine(classifier, capacity=8, lanes=8)
+        sc = FlowScenario(kind="port-scan", pkt_len=8, packets_per_batch=64, seed=2)
+        for _ in range(3):
+            b = sc.next_batch()
+            eng.ingest(b["flow_ids"], b["tokens"])
+            assert eng.resident_flows <= 8
+        assert eng.stats.flows_evicted_lru > 0
+        assert eng.resident_state_bytes() <= eng.state_budget_bytes
+
+    def test_budget_violation_rejected_at_construction(self, classifier):
+        with pytest.raises(ValueError, match="Eq. 11"):
+            _engine(classifier, capacity=64, state_budget_bytes=1024)
+
+    def test_resident_bytes_invariant_under_churn(self, classifier):
+        """The table is preallocated: resident bytes never grow with flow
+        count or flow length (the Eq. 11 per-flow bound times capacity)."""
+        eng = _engine(classifier, capacity=8, lanes=8)
+        base = eng.resident_state_bytes()
+        sc = FlowScenario(kind="heavy-churn", pkt_len=8, packets_per_batch=32, seed=3)
+        for _ in range(3):
+            b = sc.next_batch()
+            eng.ingest(b["flow_ids"], b["tokens"])
+        assert eng.resident_state_bytes() == base
+
+    def test_lru_evicts_least_recently_touched(self, classifier):
+        eng = _engine(classifier, capacity=4, lanes=4)
+        pkt = np.zeros((1, 8), np.int32)
+        for fid in [0, 1, 2, 3]:
+            eng.ingest(np.array([fid]), pkt)
+        eng.ingest(np.array([0]), pkt)  # refresh flow 0; LRU is now flow 1
+        eng.ingest(np.array([9]), pkt)
+        assert 1 not in eng.flow_ids()
+        assert {0, 2, 3, 9} <= set(eng.flow_ids())
+
+    def test_lru_never_evicts_in_batch_flow_when_avoidable(self, classifier):
+        """A resident (vetoed) flow with a packet pending in the current
+        batch must not be the LRU victim while an out-of-batch flow exists —
+        otherwise the sticky veto silently resets mid-batch."""
+        ccfg, params = classifier
+        rules = C.default_rules(ccfg, jnp.asarray([400, 401, 402, 403]))
+        eng = _engine(classifier, rules=rules, capacity=2, lanes=4)
+        sig_pkt = np.asarray([[400, 401, 402, 403, 0, 0, 0, 0]], np.int32)
+        benign = np.zeros((1, 8), np.int32)
+        out = eng.ingest(np.array([1]), sig_pkt)  # flow 1 vetoed (oldest)
+        assert bool(out["vetoed"][0])
+        eng.ingest(np.array([2]), benign)  # flow 2 is fresher than flow 1
+        # new flow 3 needs a slot; flow 1 is LRU but has a packet here, so
+        # flow 2 must be the victim and flow 1's veto must survive
+        out = eng.ingest(np.array([3, 1]), np.concatenate([benign, benign]))
+        assert bool(out["vetoed"][1]) and float(out["trust"][1]) == 1.0
+        assert 2 not in eng.flow_ids()
+
+    def test_reset_clears_table_but_keeps_compiled_step(self, classifier):
+        eng = _engine(classifier, capacity=8, lanes=4)
+        pkt = np.zeros((2, 8), np.int32)
+        out1 = eng.ingest(np.array([1, 2]), pkt)
+        traces = eng._jit_step._cache_size()
+        eng.reset()
+        assert eng.resident_flows == 0 and eng.stats.packets == 0
+        out2 = eng.ingest(np.array([1, 2]), pkt)  # dirty slots re-zeroed
+        assert eng._jit_step._cache_size() == traces
+        np.testing.assert_allclose(out1["s_nn"], out2["s_nn"], atol=1e-6)
+
+    def test_idle_timeout_evicts(self, classifier):
+        eng = _engine(classifier, capacity=8, lanes=4, idle_timeout=2)
+        pkt = np.zeros((1, 8), np.int32)
+        eng.ingest(np.array([7]), pkt)
+        for _ in range(4):
+            eng.ingest(np.array([8]), pkt)
+        assert 7 not in eng.flow_ids()
+        assert eng.stats.flows_evicted_idle == 1
+
+    def test_idle_sweep_spares_flow_transmitting_this_tick(self, classifier):
+        """A flow whose idle timer expired but that has a packet in the
+        current batch must survive the sweep with its state intact."""
+        eng = _engine(classifier, capacity=8, lanes=4, idle_timeout=2)
+        pkt = np.zeros((1, 8), np.int32)
+        eng.ingest(np.array([7]), pkt)  # tick 1
+        eng.ingest(np.array([8]), pkt)  # tick 2
+        eng.ingest(np.array([8]), pkt)  # tick 3
+        eng.ingest(np.array([7]), pkt)  # tick 4: idle-expired but transmitting
+        assert eng.stats.flows_evicted_idle == 0
+        assert eng.flow_scores(7)["tokens"] == 16  # state continued, not fresh
+
+
+class TestHardVetoHotPath:
+    def test_rule_violating_flows_veto_with_trust_one(self, classifier):
+        """TCAM hit ⇒ vetoed ⇒ S = 1.0 exactly, regardless of neural score;
+        and the veto is sticky for the flow's lifetime."""
+        ccfg, params = classifier
+        sc = FlowScenario(kind="rule-violating", pkt_len=16,
+                          packets_per_batch=64, seed=5)
+        rules = C.default_rules(ccfg, jnp.asarray(sc.anomaly_signature))
+        eng = _engine(classifier, rules=rules, capacity=512, lanes=32)
+        anom_flows, veto_flows = set(), set()
+        for _ in range(8):
+            b = sc.next_batch()
+            out = eng.ingest(b["flow_ids"], b["tokens"])
+            # the hot-path invariant: every vetoed packet reports S = 1.0
+            assert (out["trust"][out["vetoed"]] == 1.0).all()
+            # benign flows never hit the anomaly rule
+            benign_veto = out["vetoed"][~b["anomalous"]]
+            assert not benign_veto.any()
+            anom_flows |= set(b["flow_ids"][b["anomalous"]].tolist())
+            veto_flows |= set(out["flow_ids"][out["vetoed"]].tolist())
+        assert veto_flows, "no rule-violating flow was vetoed"
+        assert veto_flows <= anom_flows
+        # stickiness: a vetoed resident flow stays vetoed on a benign packet
+        fid = next(f for f in veto_flows if f in eng.flow_ids())
+        out = eng.ingest(np.array([fid]),
+                         np.zeros((1, 16), np.int32))
+        assert bool(out["vetoed"][0]) and float(out["trust"][0]) == 1.0
+
+
+class TestSwapTables:
+    def test_swap_changes_decisions_next_tick_without_retrace(self, classifier):
+        ccfg, params = classifier
+        sig_toks = jnp.asarray([300, 301, 302, 303])
+        live = C.default_rules(ccfg, sig_toks)
+        # same-shape ruleset that can never fire (cares about a marker bit
+        # pattern the stream below does not emit)
+        dead = C.default_rules(ccfg, jnp.asarray([500, 501, 502, 503]))
+        eng = _engine(classifier, rules=dead, capacity=8, lanes=4)
+
+        pkt = np.asarray([[300, 301, 302, 303, 0, 0, 0, 0]], np.int32)
+        out = eng.ingest(np.array([1]), pkt)
+        assert not out["vetoed"][0]
+        traces_before = eng._jit_step._cache_size()
+
+        rec = eng.swap_tables(ruleset=live)
+        out = eng.ingest(np.array([1]), pkt)
+        assert bool(out["vetoed"][0]) and float(out["trust"][0]) == 1.0
+        assert eng._jit_step._cache_size() == traces_before, "hot path retraced"
+        assert eng.swap_history[-1] is rec and rec.churn_ok
+
+    def test_swap_weights_from_quantized_table(self, classifier):
+        from repro.core.quantization import FixedPointSpec
+        from repro.core.symbolic import compile_weights_to_table
+
+        eng = _engine(classifier, capacity=8, lanes=4)
+        w = jnp.asarray([2.5])
+        table, spec = compile_weights_to_table(
+            w, FixedPointSpec(bits=16), budget_bits=16)
+        eng.swap_tables(weights=table, weight_spec=spec)
+        np.testing.assert_allclose(eng.rules.weights, w, atol=float(spec.scale))
+
+    def test_shape_changing_swap_rejected(self, classifier, make_ruleset):
+        eng = _engine(classifier, capacity=8, lanes=4)
+        W = eng.rules.values.shape[1]
+        grown = make_ruleset(
+            values=np.zeros((3, W), np.uint32), masks=np.zeros((3, W), np.uint32),
+            hard=[True, False, False],
+        )
+        with pytest.raises(ValueError, match="retrace"):
+            eng.swap_tables(ruleset=grown)
+
+
+@pytest.mark.slow
+class TestTrafficScale:
+    def test_10k_interleaved_flows_bounded_table(self, classifier):
+        """Acceptance: ≥10k distinct flows stream through a 512-entry table;
+        resident set and bytes stay bounded the whole time."""
+        eng = _engine(classifier, capacity=512, lanes=128)
+        sc = FlowScenario(kind="port-scan", pkt_len=8, packets_per_batch=512, seed=11)
+        while eng.stats.flows_created < 10_000:
+            b = sc.next_batch()
+            eng.ingest(b["flow_ids"], b["tokens"])
+            assert eng.resident_flows <= 512
+        assert eng.stats.flows_created >= 10_000
+        assert eng.resident_state_bytes() <= eng.state_budget_bytes
+        assert eng.stats.flows_evicted_lru > 0

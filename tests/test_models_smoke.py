@@ -14,17 +14,7 @@ from repro.train.train_step import make_train_step, make_train_state
 KEY = jax.random.PRNGKey(0)
 ALL_ARCHS = sorted(ARCHS)
 
-
-@pytest.fixture(scope="module")
-def batch_for():
-    def f(cfg, B=2, T=32):
-        tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
-        batch = {"tokens": tokens, "labels": tokens}
-        if cfg.encoder_layers:
-            batch["enc_embeds"] = jax.random.normal(KEY, (B, T, cfg.d_model))
-        return batch
-
-    return f
+# batch_for comes from conftest.py (shared with the serving/flow tiers)
 
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)

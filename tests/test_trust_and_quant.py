@@ -78,11 +78,12 @@ class TestSymbolic:
                 got = (np.asarray(packed)[:, w] >> j) & 1
                 np.testing.assert_array_equal(got, expect)
 
-    def test_ternary_match_semantics(self):
+    def test_ternary_match_semantics(self, make_ruleset):
         """TCAM: hit ⇔ (sig & mask) == (value & mask)."""
-        values = jnp.asarray([[0b1010], [0b1111]], jnp.uint32)
-        masks = jnp.asarray([[0b1110], [0b0011]], jnp.uint32)
-        rules = sym.RuleSet(values, masks, jnp.ones(2), jnp.asarray([True, False]))
+        rules = make_ruleset(
+            values=[[0b1010], [0b1111]], masks=[[0b1110], [0b0011]],
+            hard=[True, False],
+        )
         sig = jnp.asarray([[0b1011], [0b0111], [0b0011]], jnp.uint32)
         hits = sym.ternary_match(sig, rules)
         # rule0 cares about bits 1-3 == 101x: sig 1011 ✓, 0111 ✗, 0011 ✗

@@ -1,0 +1,185 @@
+"""Property-based tier for the paper's verifiable trust invariants.
+
+Hypothesis-driven checks (skipped when hypothesis is absent, like
+test_trust_and_quant):
+
+* ``fusion_is_trustworthy`` holds for arbitrary fusion parameters and
+  arbitrary (even adversarial) neural/symbolic scores;
+* the hard veto is independent of the neural input — zero gradient flows
+  through the hard branch w.r.t. both s_nn and the fusion parameters;
+* ``pack_bits`` / ``ternary_match`` agree bit-for-bit with a pure-Python
+  big-int oracle (TCAM semantics are exact, not approximate);
+* ``compile_weights_to_table`` → ``decompile_table`` round-trips within the
+  fixed-point error bound η_q (Eq. 19 table encoding).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fusion as fu
+from repro.core import symbolic as sym
+from repro.core.quantization import FixedPointSpec
+
+finite = dict(allow_nan=False, allow_infinity=False)
+
+
+def _params(alpha, beta):
+    return {"alpha": jnp.asarray(alpha, jnp.float32),
+            "beta": jnp.asarray(beta, jnp.float32)}
+
+
+class TestFusionTrustInvariant:
+    @settings(max_examples=150, deadline=None)
+    @given(
+        alpha=st.floats(-50, 50, **finite),
+        beta=st.floats(-50, 50, **finite),
+        s_nn=st.floats(-1e6, 1e6, **finite),
+        s_sym=st.floats(-1e4, 1e4, **finite),
+        hard=st.booleans(),
+    )
+    def test_trustworthy_for_any_params_and_scores(self, alpha, beta, s_nn, s_sym, hard):
+        """𝕀_sym ∧ λ_h ⇒ S = 1 for EVERY (α, β, s_nn, s_sym) — the learned
+        fusion parameters cannot break the guarantee."""
+        params = _params(alpha, beta)
+        ok = fu.fusion_is_trustworthy(
+            params, jnp.asarray(s_nn, jnp.float32), jnp.asarray(s_sym, jnp.float32), jnp.asarray(hard)
+        )
+        assert bool(jnp.all(ok))
+        out = fu.cascade_fusion(
+            params, jnp.asarray(s_nn, jnp.float32), jnp.asarray(s_sym, jnp.float32), jnp.asarray(hard)
+        )
+        if hard:
+            assert float(out) == 1.0
+
+    @settings(max_examples=100, deadline=None)
+    @given(
+        alpha=st.floats(-10, 10, **finite),
+        beta=st.floats(-10, 10, **finite),
+        s_nn=st.floats(-100, 100, **finite),
+        s_sym=st.floats(-100, 100, **finite),
+    )
+    def test_hard_branch_has_zero_gradient(self, alpha, beta, s_nn, s_sym):
+        """The veto is independent of the neural path: no gradient reaches
+        s_nn, α or β when the hard rule fires (Eq. 15's cascade is a
+        deterministic function of the TCAM tier only)."""
+        params = _params(alpha, beta)
+
+        g_nn = jax.grad(
+            lambda s: fu.cascade_fusion(params, s, jnp.asarray(s_sym, jnp.float32), jnp.asarray(True))
+        )(jnp.asarray(s_nn, jnp.float32))
+        assert float(g_nn) == 0.0
+
+        g_ab = jax.grad(
+            lambda p: fu.cascade_fusion(p, jnp.asarray(s_nn, jnp.float32), jnp.asarray(s_sym, jnp.float32), jnp.asarray(True))
+        )(params)
+        assert float(g_ab["alpha"]) == 0.0 and float(g_ab["beta"]) == 0.0
+
+
+# --------------------------------------------------------------------------
+# pure-Python bit-level oracles
+# --------------------------------------------------------------------------
+
+def _oracle_pack(bits):
+    """(n_bits,) 0/1 list -> list of uint32 words, little-endian bit order."""
+    words = []
+    for w0 in range(0, len(bits), 32):
+        word = 0
+        for j, b in enumerate(bits[w0 : w0 + 32]):
+            word |= int(b) << j
+        words.append(word)
+    return words
+
+
+def _oracle_ternary(sig_words, value_words, mask_words):
+    return all(
+        (s & m) == (v & m)
+        for s, v, m in zip(sig_words, value_words, mask_words)
+    )
+
+
+class TestSymbolicBitOracles:
+    @settings(max_examples=100, deadline=None)
+    @given(bits=st.lists(st.integers(0, 1), min_size=1, max_size=96))
+    def test_pack_bits_matches_python_oracle(self, bits):
+        packed = sym.pack_bits(jnp.asarray(bits, jnp.uint32))
+        assert np.asarray(packed).tolist() == _oracle_pack(bits)
+
+    @settings(max_examples=100, deadline=None)
+    @given(
+        data=st.data(),
+        n_words=st.integers(1, 3),
+        n_rules=st.integers(1, 4),
+    )
+    def test_ternary_match_matches_python_oracle(self, data, n_words, n_rules):
+        u32 = st.integers(0, 2**32 - 1)
+        sig = data.draw(st.lists(u32, min_size=n_words, max_size=n_words))
+        values = [
+            data.draw(st.lists(u32, min_size=n_words, max_size=n_words))
+            for _ in range(n_rules)
+        ]
+        masks = [
+            data.draw(st.lists(u32, min_size=n_words, max_size=n_words))
+            for _ in range(n_rules)
+        ]
+        rules = sym.RuleSet(
+            values=jnp.asarray(values, jnp.uint32),
+            masks=jnp.asarray(masks, jnp.uint32),
+            weights=jnp.ones((n_rules,)),
+            hard=jnp.zeros((n_rules,), bool),
+        )
+        hits = sym.ternary_match(jnp.asarray([sig], jnp.uint32), rules)[0]
+        expect = [_oracle_ternary(sig, v, m) for v, m in zip(values, masks)]
+        assert np.asarray(hits).tolist() == expect
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        n_bits=st.integers(1, 80),
+    )
+    def test_pack_then_match_roundtrip(self, seed, n_bits):
+        """A signature always matches the exact-value/full-mask rule built
+        from itself, and stops matching when any cared bit is flipped."""
+        g = np.random.default_rng(seed)
+        bits = g.integers(0, 2, size=(n_bits,))
+        packed = sym.pack_bits(jnp.asarray(bits, jnp.uint32))[None]
+        full_mask = jnp.full_like(packed, 0xFFFFFFFF)
+        rules = sym.RuleSet(packed, full_mask, jnp.ones((1,)), jnp.asarray([True]))
+        assert bool(sym.ternary_match(packed, rules)[0, 0])
+        flipped = bits.copy()
+        flip_at = int(g.integers(0, n_bits))
+        flipped[flip_at] ^= 1
+        packed_f = sym.pack_bits(jnp.asarray(flipped, jnp.uint32))[None]
+        assert not bool(sym.ternary_match(packed_f, rules)[0, 0])
+
+
+class TestCompiledTableBounds:
+    @settings(max_examples=75, deadline=None)
+    @given(
+        bits=st.sampled_from([8, 16]),
+        weights=st.lists(st.floats(0.0, 100.0, **finite), min_size=1, max_size=32),
+    )
+    def test_compile_decompile_error_bounded(self, bits, weights):
+        w = jnp.asarray(weights, jnp.float32)
+        spec = FixedPointSpec(bits=bits)
+        table, qspec = sym.compile_weights_to_table(
+            w, spec, budget_bits=w.size * bits)
+        back = sym.decompile_table(table, qspec)
+        # η_q (half an LSB) plus fp32 representation slack on w / scale
+        bound = qspec.eta_q + np.abs(np.asarray(w)) * 2e-7 + 1e-9
+        assert bool(jnp.all(jnp.abs(back - w) <= bound))
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        bits=st.sampled_from([8, 16]),
+        n=st.integers(2, 64),
+    )
+    def test_budget_overflow_always_rejected(self, bits, n):
+        w = jnp.ones((n,))
+        with pytest.raises(ValueError, match="Eq. 19"):
+            sym.compile_weights_to_table(
+                w, FixedPointSpec(bits=bits), budget_bits=(n - 1) * bits)
