@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, tiny_backbone
+from repro.compile import compile_program
 from repro.data.pipeline import FlowScenario
 from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
 from repro.train import classifier as C
@@ -66,13 +67,20 @@ def serve_flow_benchmarks(fast: bool = False) -> List[str]:
                 packets_per_batch=128 if fast else 256, seed=7,
             )
             if eng is None:
-                rules = C.default_rules(ccfg, jnp.asarray(sc.anomaly_signature))
-                eng = FlowEngine(
-                    ccfg, params, rules,
+                # the deploy path under benchmark IS the compiled artifact:
+                # compile once per backend, deploy via from_program
+                program = compile_program(
+                    ccfg, params,
+                    rules=lambda c: C.default_rules(
+                        c, jnp.asarray(sc.anomaly_signature)
+                    ),
+                    backend=backend,
+                )
+                eng = FlowEngine.from_program(
+                    program,
                     FlowEngineConfig(
                         capacity=512 if fast else 2048,
                         lanes=128 if fast else 256,
-                        backend=backend,
                     ),
                 )
             else:

@@ -85,11 +85,12 @@ def table2_resources() -> List[str]:
         m=256, d_v=64, state_bits=16, z_bits=8, window_len=64, d_model=64,
         window_elem_bits=8, n_global=64, n_hard_rules=64,
         map_table_entries=4096, map_entry_bits=16 * 16,
-    )
+    ).as_dict()  # machine-readable form (shared with the compile ledger)
     rows.append(csv_row(
         "table2/chimera", 0.0,
-        f"bits/flow={rep.stateful_bits_per_flow};SRAM={rep.sram_fraction:.4f};"
-        f"TCAM={rep.tcam_fraction:.4f};Bus={rep.bus_fraction:.4f}",
+        f"bits/flow={rep['stateful_bits_per_flow']};"
+        f"SRAM={rep['sram_fraction']:.4f};"
+        f"TCAM={rep['tcam_fraction']:.4f};Bus={rep['bus_fraction']:.4f}",
     ))
     # baseline analytic rows (per-flow state follows each model family's
     # recurrent state footprint; SRAM ∝ table params)

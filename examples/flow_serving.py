@@ -1,12 +1,16 @@
-"""Traffic serving quickstart: stream interleaved flows through the
-FlowEngine and watch the hard-rule veto fire on rule-violating flows.
+"""Traffic serving quickstart: compile a Chimera classifier into a
+DataplaneProgram, deploy it, and watch the hard-rule veto fire.
 
-Builds a tiny Chimera traffic classifier, installs the anomaly-signature
-hard rule as the TCAM tier, then streams a mixed packet-arrival scenario
-(steady protocol mix + port scans + bursts + rule-violating flows) through
-the flow table.  Ends with a two-timescale control-plane swap: the soft-rule
-weight column is re-installed from a quantized SRAM table between ticks,
-without recompiling the jitted hot path.
+The compile/deploy protocol in one file: ``compile_program`` lowers the
+tiny classifier through the pass pipeline (signature layout, rule packing +
+HL-MRF weight-table compilation, streaming-state fixed point, kernel
+backend, resource ledger), the ledger proves the artifact fits the
+``DataplaneSpec`` budget, and ``FlowEngine.from_program`` installs it on
+the flow-table runtime.  A mixed packet-arrival scenario (steady protocol
+mix + port scans + bursts + rule-violating flows) then streams through the
+table.  Ends with a two-timescale control-plane update: a *program delta*
+(doubled soft-rule weights, re-audited by the compiler) is installed
+between ticks without recompiling the jitted hot path.
 
     PYTHONPATH=src python examples/flow_serving.py [--batches 8]
 """
@@ -19,9 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compile import compile_delta, compile_program
 from repro.configs import smoke_config
-from repro.core.quantization import FixedPointSpec
-from repro.core.symbolic import compile_weights_to_table
 from repro.data.pipeline import FlowScenario
 from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
 from repro.train import classifier as C
@@ -41,9 +44,17 @@ def main():
 
     scenario = FlowScenario(kind=args.scenario, pkt_len=16,
                             packets_per_batch=args.packets, seed=0)
-    rules = C.default_rules(ccfg, jnp.asarray(scenario.anomaly_signature))
-    engine = FlowEngine(ccfg, params, rules,
-                        FlowEngineConfig(capacity=args.capacity, lanes=128))
+    # the signature-layout pass sizes sig_words; the rules callable builds
+    # the TCAM tier against the finalized (aliasing-free) layout
+    program = compile_program(
+        ccfg, params,
+        rules=lambda c: C.default_rules(c, jnp.asarray(scenario.anomaly_signature)),
+    )
+    print("compile ledger (every stage within DataplaneSpec budget):")
+    print(program.ledger.as_table())
+
+    engine = FlowEngine.from_program(
+        program, FlowEngineConfig(capacity=args.capacity, lanes=128))
     print(f"flow table: {args.capacity} entries x "
           f"{engine.per_flow_state_bytes()} B/flow = "
           f"{engine.resident_state_bytes()/2**20:.1f} MiB "
@@ -73,12 +84,13 @@ def main():
               f"flows, {false_vetoes} false veto(es) on benign flows; "
               f"S = 1.0 exactly on every vetoed packet")
 
-    # two-timescale install: double the soft weights via a quantized table
-    w = np.asarray(rules.weights) * 2.0
-    table, spec = compile_weights_to_table(
-        jnp.asarray(w), FixedPointSpec(bits=16), budget_bits=w.size * 16)
-    rec = engine.swap_tables(weights=table, weight_spec=spec)
-    print(f"control-plane swap at tick {rec.tick}: install {rec.install_s*1e3:.2f}ms, "
+    # two-timescale install: double the soft weights through an audited
+    # program delta (the compiler re-runs rule packing + the Eq. 19 table)
+    delta = compile_delta(
+        program, weights=np.asarray(program.rules.weights) * 2.0, step=s.ticks)
+    rec = engine.swap_tables(delta=delta)
+    print(f"control-plane delta at tick {rec.tick}: install "
+          f"{rec.install_s*1e3:.2f}ms (source={rec.source}), "
           f"no retrace of the jitted step")
 
 

@@ -1,0 +1,29 @@
+"""Pass-based dataplane compiler (DESIGN.md §11).
+
+Front door::
+
+    from repro.compile import compile_program, DataplaneProgram
+
+    program = compile_program(ccfg, params, rules=lambda c: default_rules(c, sig))
+    engine = FlowEngine.from_program(program, FlowEngineConfig(capacity=2048))
+"""
+
+from repro.compile.ledger import BudgetError, ResourceLedger, StageEntry
+from repro.compile.passes import required_sig_words
+from repro.compile.program import (
+    DataplaneProgram,
+    ProgramDelta,
+    compile_delta,
+    compile_program,
+)
+
+__all__ = [
+    "BudgetError",
+    "DataplaneProgram",
+    "ProgramDelta",
+    "ResourceLedger",
+    "StageEntry",
+    "compile_delta",
+    "compile_program",
+    "required_sig_words",
+]

@@ -1,0 +1,333 @@
+"""The dataplane compiler's passes (DESIGN.md §11).
+
+``compile_program`` lowers a trained Chimera classifier into the deployable
+:class:`~repro.compile.program.DataplaneProgram` by running these explicit,
+individually-testable passes in order:
+
+1. :func:`signature_layout`  — size the packed marker signature so every
+   marker token owns one TCAM bit (absorbs the ``sig_words`` aliasing
+   workaround that used to be duplicated across drivers).
+2. :func:`pack_rules`        — pad the RuleSet to the signature width and
+   compile the learned HL-MRF soft weights into the fixed-point SRAM table
+   (Eq. 19, via :func:`repro.core.symbolic.compile_weights_to_table`).
+3. :func:`quantize_state`    — pick the fixed-point format of the streaming
+   (S, Z) score accumulators so the Eq. 39 ``overflow_safe_horizon`` covers
+   the configured flow horizon; check the Eq. 7/11 and Eq. 13 per-flow
+   SRAM budgets.
+4. :func:`select_backend`    — kernel backend + decode tile selection via
+   ``kernels/dispatch`` and ``kernels/autotune`` (VMEM is the TPU-side
+   Eq. 11 analogue).
+5. :func:`assemble_ledger`   — shared-SRAM / TCAM / action-bus aggregate
+   accounting extending :class:`repro.core.hardware_model.ResourceReport`.
+
+Every pass returns `(artifact(s), [StageEntry, ...])`; the driver in
+``program.py`` collects entries into the :class:`ResourceLedger` and raises
+:class:`BudgetError` on any unwaived violation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import symbolic
+from repro.core.feature_maps import phi_norm_bound
+from repro.core.hardware_model import (
+    DEFAULT_TPU,
+    DataplaneSpec,
+    TPUSpec,
+    aggregated_state_bits,
+    chimera_resource_report,
+    window_bits,
+)
+from repro.core.quantization import FixedPointSpec, overflow_safe_horizon
+from repro.core.state_quant import StateQuantConfig
+from repro.compile.ledger import StageEntry
+
+# window ring entries travel as 8-bit quantized elements on-switch (the
+# Table 2 operating point); shared with the aggregate report below
+WINDOW_ELEM_BITS = 8
+
+
+# --------------------------------------------------------------------------
+# Pass 1: signature / TCAM layout
+# --------------------------------------------------------------------------
+
+def required_sig_words(vocab_size: int, marker_base: int) -> int:
+    """Packed uint32 words needed so every marker token (``tokens >=
+    marker_base``) owns its own signature bit.
+
+    This is the single source of truth for the layout the drivers used to
+    hand-compute: with fewer words, ``packet_signature``'s clip aliases all
+    high markers onto the last bit and hard-rule TCAM semantics silently
+    degrade (two distinct markers become indistinguishable to every rule).
+    """
+    n_markers = max(vocab_size - marker_base, 0)
+    return max(-(-n_markers // 32), 1)
+
+
+def signature_layout(
+    ccfg, rules: Optional[symbolic.RuleSet], spec: DataplaneSpec
+):
+    """Finalize ``ccfg.sig_words``: wide enough for every marker token and
+    for any pre-built ruleset (never truncates caller rules)."""
+    need = required_sig_words(ccfg.arch.vocab_size, ccfg.marker_base)
+    if rules is not None:
+        need = max(need, int(rules.values.shape[1]))
+    ccfg = dataclasses.replace(ccfg, sig_words=need)
+    sig_bits = 32 * need
+    entries = [
+        StageEntry(
+            stage="signature-layout",
+            resource="phv-lane-bits",
+            used=sig_bits,
+            budget=spec.phv_lane_bits,
+            detail=f"{need} uint32 words cover markers "
+                   f"[{ccfg.marker_base}, {ccfg.arch.vocab_size}) in the PHV",
+        )
+    ]
+    return ccfg, entries
+
+
+# --------------------------------------------------------------------------
+# Pass 2: rule packing + HL-MRF weight-table compilation
+# --------------------------------------------------------------------------
+
+def pack_rules(
+    ccfg,
+    rules: symbolic.RuleSet,
+    spec: DataplaneSpec,
+    weight_bits: int = 16,
+) -> Tuple[symbolic.RuleSet, jax.Array, FixedPointSpec, List[StageEntry]]:
+    """Pad rule signatures to the compiled width and lower the soft-rule
+    weight column into the Eq. 19 fixed-point SRAM table."""
+    W = ccfg.sig_words
+    have = int(rules.values.shape[1])
+    if have > W:
+        raise ValueError(
+            f"ruleset is {have} signature words wide but the compiled "
+            f"layout has {W}; rules care about bits no packet can set"
+        )
+    if have < W:
+        pad = W - have
+        z = jnp.zeros(rules.values.shape[:-1] + (pad,), jnp.uint32)
+        rules = symbolic.RuleSet(
+            values=jnp.concatenate([rules.values, z], axis=-1),
+            masks=jnp.concatenate([rules.masks, z], axis=-1),
+            weights=rules.weights,
+            hard=rules.hard,
+        )
+    M = rules.n_rules
+    table, wspec = symbolic.compile_weights_to_table(
+        rules.weights, FixedPointSpec(bits=weight_bits), spec.sram_total_bits
+    )
+    roundtrip = float(
+        jnp.max(jnp.abs(symbolic.decompile_table(table, wspec) - rules.weights))
+    )
+    tcam_used = M + ccfg.arch.chimera.n_global
+    entries = [
+        StageEntry(
+            stage="rule-packing",
+            resource="tcam-entries",
+            used=tcam_used,
+            budget=spec.tcam_total_entries,
+            detail=f"{M} ternary rules + {ccfg.arch.chimera.n_global} static "
+                   f"globals (Eq. 14/16)",
+        ),
+        StageEntry(
+            stage="rule-packing",
+            resource="rule-table-bits",
+            used=M * weight_bits,
+            budget=spec.sram_total_bits,
+            detail=f"Eq. 19 W_q table, {weight_bits}-bit; round-trip err "
+                   f"{roundtrip:.3g} <= eta_q {wspec.eta_q:.3g}",
+        ),
+    ]
+    return rules, table, wspec, entries
+
+
+# --------------------------------------------------------------------------
+# Pass 3: streaming-state fixed-point quantization
+# --------------------------------------------------------------------------
+
+def quantize_state(
+    ccfg,
+    qcfg: StateQuantConfig,
+    spec: DataplaneSpec,
+    horizon: int,
+) -> Tuple[float, List[StageEntry]]:
+    """Choose the S-accumulator fixed-point scale so ``horizon`` updates
+    provably cannot overflow (Eq. 39), and check the Eq. 7/11 + Eq. 13
+    per-flow SRAM budgets for the quantized streaming state."""
+    arch = ccfg.arch
+    ch = arch.chimera
+    d_v = arch.head_dim
+    m = ch.feature_map.feature_dim(arch.head_dim)
+    agg_bits = aggregated_state_bits(m, d_v, qcfg.s_bits) + m * qcfg.z_bits
+    win_bits = window_bits(ch.chunk_size, arch.d_model, WINDOW_ELEM_BITS)
+
+    # derive the accumulator LSB from the no-overflow condition: per-step
+    # growth is bounded by B_phi * R_v real units, so the smallest safe scale
+    # satisfies horizon * (B_phi*R_v/scale + 0.5) <= max_int
+    b_phi = phi_norm_bound(ch.feature_map, arch.head_dim)
+    r_v = ch.feature_map.input_scale
+    max_int = 2 ** (qcfg.s_bits - 1) - 1
+    headroom = max_int / horizon - 0.5
+    if headroom > 0:
+        s_scale = b_phi * r_v / headroom
+        safe = overflow_safe_horizon(
+            b_phi, r_v, FixedPointSpec(bits=qcfg.s_bits, scale=s_scale)
+        )
+        if safe < horizon:  # the two divisions round independently; nudge
+            s_scale *= 1.0 + 1e-9
+            safe = overflow_safe_horizon(
+                b_phi, r_v, FixedPointSpec(bits=qcfg.s_bits, scale=s_scale)
+            )
+    else:  # horizon unreachable at this bit width regardless of scale
+        s_scale = float("inf")
+        safe = 2 * max_int
+    entries = [
+        StageEntry(
+            stage="state-quantization",
+            resource="per-flow-sram-bits",
+            used=agg_bits,
+            budget=spec.per_flow_sram_bits,
+            detail=f"Eq. 7/11 aggregated (S, Z): m={m} d_v={d_v} "
+                   f"b=({qcfg.s_bits},{qcfg.z_bits})",
+        ),
+        StageEntry(
+            stage="state-quantization",
+            resource="window-sram-bits",
+            used=win_bits,
+            budget=spec.per_flow_sram_bits,
+            detail=f"Eq. 13 ring: L={ch.chunk_size} d={arch.d_model} "
+                   f"b={WINDOW_ELEM_BITS}",
+        ),
+        StageEntry(
+            stage="state-quantization",
+            resource="overflow-horizon",
+            used=horizon,
+            budget=safe,
+            detail=f"Eq. 39: scale={s_scale:.4g} B_phi={b_phi:.4g} "
+                   f"R_v={r_v:.3g} at {qcfg.s_bits}-bit",
+        ),
+    ]
+    return s_scale, entries
+
+
+# --------------------------------------------------------------------------
+# Pass 4: kernel backend + tile selection
+# --------------------------------------------------------------------------
+
+def select_backend(
+    ccfg,
+    backend: Optional[str],
+    tpu: TPUSpec = DEFAULT_TPU,
+) -> Tuple[Optional[str], Optional[Dict[str, int]], List[StageEntry]]:
+    """Resolve the kernel backend and (for dispatch backends) look up the
+    autotuned decode tiles; record the VMEM working set against the TPU's
+    SRAM-tier budget (the on-host Eq. 11 analogue)."""
+    from repro.kernels import autotune
+    from repro.kernels.dispatch import apply_kernel_backend, resolve_backend
+
+    arch = ccfg.arch
+    _, effective = apply_kernel_backend(arch, backend)  # fails fast on typos
+    ch = arch.chimera
+    dims = {
+        "d": arch.head_dim,
+        "dv": arch.head_dim,
+        "m": ch.feature_map.feature_dim(arch.head_dim),
+        "gq": max(arch.n_heads // arch.n_kv_heads, 1),
+        "T": ch.chunk_size,
+    }
+    tiles: Optional[Dict[str, int]] = None
+    if effective not in (None, "xla"):
+        tiles = autotune.get_tiles(
+            "decode_step", dims, backend=resolve_backend(effective)
+        )
+    probe = tiles or {"chunk_size": ch.chunk_size}
+    vmem = autotune.vmem_bytes("decode_step", probe, dims)
+    entries = [
+        StageEntry(
+            stage="kernel-backend",
+            resource="vmem-bytes",
+            used=vmem,
+            budget=autotune.vmem_budget(tpu),
+            detail=f"backend={effective or 'xla'} tiles={probe} "
+                   f"(decode_step working set, double-buffered)",
+        )
+    ]
+    return effective, tiles, entries
+
+
+# --------------------------------------------------------------------------
+# Pass 5: aggregate shared-resource accounting
+# --------------------------------------------------------------------------
+
+def _map_table(ccfg) -> Tuple[int, int]:
+    """(entries, bits/entry) of the shared Map codebook / projection SRAM."""
+    arch = ccfg.arch
+    fm = arch.chimera.feature_map
+    if fm.kind == "codebook":
+        return fm.codebook_size, arch.head_dim * (fm.codebook_bits or 16)
+    return fm.feature_dim(arch.head_dim), arch.head_dim * 16
+
+
+def assemble_ledger(
+    ccfg,
+    rules: symbolic.RuleSet,
+    qcfg: StateQuantConfig,
+    weight_bits: int,
+    flows: int,
+    spec: DataplaneSpec,
+):
+    """Shared SRAM / TCAM / action-bus aggregate: the paper's Table 2 row
+    (``chimera_resource_report``) plus its ledger entries."""
+    arch = ccfg.arch
+    ch = arch.chimera
+    m = ch.feature_map.feature_dim(arch.head_dim)
+    map_entries, map_bits = _map_table(ccfg)
+    report = chimera_resource_report(
+        m=m,
+        d_v=arch.head_dim,
+        state_bits=qcfg.s_bits,
+        z_bits=qcfg.z_bits,
+        window_len=ch.chunk_size,
+        d_model=arch.d_model,
+        window_elem_bits=WINDOW_ELEM_BITS,
+        n_global=ch.n_global,
+        n_hard_rules=int(jnp.sum(rules.hard)),
+        map_table_entries=map_entries,
+        map_entry_bits=map_bits,
+        flows=flows,
+        spec=spec,
+    )
+    sz = aggregated_state_bits(m, arch.head_dim, qcfg.s_bits) + m * qcfg.z_bits
+    win = window_bits(ch.chunk_size, arch.d_model, WINDOW_ELEM_BITS)
+    sram_used = (
+        flows * (sz + win) / 64  # 64-way shared-bank amortization (Table 2)
+        + map_entries * map_bits
+        + rules.n_rules * weight_bits
+    )
+    entries = [
+        StageEntry(
+            stage="resource-ledger",
+            resource="shared-sram-bits",
+            used=sram_used,
+            budget=spec.sram_total_bits,
+            detail=f"{flows} flows (64-way banks) + Map table + W_q table",
+        ),
+        StageEntry(
+            stage="resource-ledger",
+            # raw bits, NOT report.bus_fraction: the report clips fractions
+            # to 1.0 for table rendering, which would mask an overflow here
+            resource="action-bus-bits",
+            used=m * 8 // spec.stages,
+            budget=spec.action_bus_bits,
+            detail=f"one quantized phi row staged over {spec.stages} stages",
+        ),
+    ]
+    return report, entries

@@ -107,10 +107,21 @@ class ResourceReport:
     tcam_fraction: float
     bus_fraction: float
 
+    def as_dict(self) -> dict:
+        """Machine-readable form (consumed by the compile ledger and the
+        Table 2 benchmark; JSON-serializable as-is)."""
+        return {
+            "stateful_bits_per_flow": int(self.stateful_bits_per_flow),
+            "sram_fraction": float(self.sram_fraction),
+            "tcam_fraction": float(self.tcam_fraction),
+            "bus_fraction": float(self.bus_fraction),
+        }
+
     def as_row(self) -> str:
+        d = self.as_dict()
         return (
-            f"{self.stateful_bits_per_flow},"
-            f"{self.sram_fraction:.4f},{self.tcam_fraction:.4f},{self.bus_fraction:.4f}"
+            f"{d['stateful_bits_per_flow']},"
+            f"{d['sram_fraction']:.4f},{d['tcam_fraction']:.4f},{d['bus_fraction']:.4f}"
         )
 
 

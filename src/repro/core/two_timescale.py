@@ -138,12 +138,26 @@ class TwoTimescaleController:
         centroids: jax.Array,
         occupancy: jax.Array,
         key: jax.Array,
-    ) -> Tuple[jax.Array, Optional[InstallRecord]]:
+        *,
+        program=None,
+        new_weights: Optional[jax.Array] = None,
+    ):
         """Run the slow path if a control-plane epoch boundary was reached.
 
-        Returns (possibly-new centroids, install record or None)."""
+        Returns (possibly-new centroids, install record or None).
+
+        **Program-delta path**: when ``program`` (a compiled
+        :class:`repro.compile.DataplaneProgram`) is passed, the return
+        gains a third element — a :class:`repro.compile.ProgramDelta`
+        (or None when the Eq. 20 gate held the update back).  The delta
+        re-runs the compiler's rule-packing/quantization passes on
+        ``new_weights`` (the control plane's re-learned soft-rule column;
+        defaults to the program's installed weights), so every slow-timescale
+        table that reaches ``FlowEngine.swap_tables`` carries the same
+        budget audit as the initial deployment.
+        """
         if step == 0 or step % self.cfg.t_cp_steps != 0 or not self._reservoir:
-            return centroids, None
+            return (centroids, None) if program is None else (centroids, None, None)
         samples = jnp.asarray(np.concatenate(self._reservoir, axis=0))
         # occupancy-weighted recluster: high-traffic centroids attract detail
         new_cent, assigns = kmeans(samples, self.n_centroids, self.cfg.kmeans_iters, key)
@@ -161,7 +175,15 @@ class TwoTimescaleController:
             churn_ok=churn_ok,
         )
         self.history.append(rec)
-        return (new_cent if installed else centroids), rec
+        cent_out = new_cent if installed else centroids
+        if program is None:
+            return cent_out, rec
+        delta = None
+        if installed:
+            from repro.compile.program import compile_delta  # lazy: no core→compile cycle
+
+            delta = compile_delta(program, weights=new_weights, step=step)
+        return cent_out, rec, delta
 
 
 def atomic_swap(old_tree, new_tree):

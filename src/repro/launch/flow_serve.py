@@ -1,8 +1,8 @@
-"""Traffic-serving driver: FlowScenario packet streams through the
-flow-table runtime.
+"""Traffic-serving driver: compile the classifier into a DataplaneProgram,
+deploy it on the flow-table runtime, stream FlowScenario packets through it.
 
     PYTHONPATH=src python -m repro.launch.flow_serve --scenario port-scan \
-        --batches 8 --capacity 2048 [--backend pallas-interpret]
+        --batches 8 --capacity 2048 [--backend pallas-interpret] [--ledger]
 """
 
 from __future__ import annotations
@@ -27,6 +27,10 @@ def main() -> None:
     ap.add_argument("--idle-timeout", type=int, default=0)
     ap.add_argument("--backend", default=None,
                     help="xla | auto | pallas-tpu | pallas-interpret | reference")
+    ap.add_argument("--save-program", default=None, metavar="DIR",
+                    help="serialize the compiled program via the Checkpointer")
+    ap.add_argument("--ledger", action="store_true",
+                    help="print the per-stage resource ledger")
     args = ap.parse_args()
 
     import dataclasses
@@ -34,6 +38,7 @@ def main() -> None:
     import jax
     import jax.numpy as jnp
 
+    from repro.compile import compile_program
     from repro.configs import get_config, smoke_config
     from repro.data.pipeline import FlowScenario
     from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
@@ -42,23 +47,32 @@ def main() -> None:
     arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     vocab = max(arch.vocab_size, 512)  # byte + marker alphabet
     arch = dataclasses.replace(arch, vocab_size=vocab)
-    # signature must cover the whole marker range: one TCAM bit per marker
-    # token, or packet_signature's clip aliases high markers onto one bit
-    # and the hard-rule semantics silently degrade
-    sig_words = -(-(vocab - 256) // 32)
-    ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256,
-                              sig_words=sig_words)
+    ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256)
     params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
 
     scenario = FlowScenario(kind=args.scenario, vocab_size=vocab,
                             pkt_len=args.pkt_len,
                             packets_per_batch=args.packets, seed=0)
-    rules = C.default_rules(ccfg, jnp.asarray(scenario.anomaly_signature))
-    engine = FlowEngine(
-        ccfg, params, rules,
+    # the compiler's signature-layout pass sizes sig_words so every marker
+    # owns a TCAM bit; the rules callable sees the finalized layout.  The
+    # full arch intentionally exceeds the 1KB/flow switch budget (Table 2
+    # amortizes it over shared SRAM banks), so the per-flow stage is waived
+    # for this TPU-host deployment — recorded in the ledger, not dropped.
+    program = compile_program(
+        ccfg, params,
+        rules=lambda c: C.default_rules(c, jnp.asarray(scenario.anomaly_signature)),
+        backend=args.backend,
+        waivers=() if args.smoke else ("state-quantization",),
+    )
+    if args.ledger:
+        print(program.ledger.as_table())
+    if args.save_program:
+        program.save(args.save_program)
+        print(f"program saved to {args.save_program}")
+    engine = FlowEngine.from_program(
+        program,
         FlowEngineConfig(capacity=args.capacity, lanes=args.lanes,
-                         idle_timeout=args.idle_timeout,
-                         backend=args.backend),
+                         idle_timeout=args.idle_timeout),
     )
 
     t0 = time.perf_counter()

@@ -70,6 +70,16 @@ class ServeEngine:
         )
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_program(cls, program, **kwargs) -> "ServeEngine":
+        """Deploy a compiled :class:`repro.compile.DataplaneProgram` as an
+        LM-style slot engine: the program's backbone and kernel-backend
+        selection, the same artifact the FlowEngine deploys.  ``kwargs``
+        are the deployment-site knobs (batch_slots, max_len, ...)."""
+        kwargs.setdefault("backend", program.backend)
+        return cls(program.ccfg.arch, program.params["backbone"], **kwargs)
+
+    # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.pending.append(req)
 

@@ -29,7 +29,6 @@ idle eviction keeping the resident set inside ``capacity``.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -78,8 +77,10 @@ class FlowStats:
 @dataclasses.dataclass(frozen=True)
 class SwapRecord:
     tick: int
-    install_s: float
+    install_s: float  # measured wall-clock install (device-ready, Eq. 18)
     churn_ok: bool  # Eq. 18: install completed within the control epoch
+    t_cp_s: float = 0.0  # the control-plane epoch the install was held to
+    source: str = "manual"  # "manual" | "delta" (audited ProgramDelta)
 
 
 class FlowEngine:
@@ -101,6 +102,7 @@ class FlowEngine:
         self.rules = rules
         self.stats = FlowStats()
         self.swap_history: List[SwapRecord] = []
+        self.program = None  # set by from_program
 
         # slot-batched state: capacity real slots + one scratch slot that
         # absorbs padding lanes (index == capacity)
@@ -133,6 +135,27 @@ class FlowEngine:
         self._jit_step = jax.jit(
             self._make_step(), donate_argnums=(2, 3, 4, 5, 6)
         )
+
+    # ------------------------------------------------------------------
+    # compiled-program deployment (the front-door construction path)
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_program(
+        cls, program, fcfg: FlowEngineConfig = FlowEngineConfig()
+    ) -> "FlowEngine":
+        """Deploy a compiled :class:`repro.compile.DataplaneProgram`.
+
+        The program supplies the classifier config (with the compiled
+        signature layout), parameters, packed rules, and the kernel backend
+        selected by the compile passes; ``fcfg`` supplies deployment-site
+        knobs (capacity, lanes, timeouts).  An explicit ``fcfg.backend``
+        overrides the program's selection.
+        """
+        if fcfg.backend is None and program.backend is not None:
+            fcfg = dataclasses.replace(fcfg, backend=program.backend)
+        eng = cls(program.ccfg, program.params, program.rules, fcfg)
+        eng.program = program
+        return eng
 
     # ------------------------------------------------------------------
     # state accounting
@@ -380,17 +403,33 @@ class FlowEngine:
         ruleset: Optional[symbolic.RuleSet] = None,
         weights: Optional[jax.Array] = None,
         weight_spec=None,
+        delta=None,
     ) -> SwapRecord:
         """Atomically install new compiled tables between ticks (§3.6).
 
         ``ruleset`` replaces the whole TCAM/SRAM rule table; ``weights``
         replaces only the soft-rule weight column — pass a float array, or a
         quantized SRAM table plus its ``FixedPointSpec`` as ``weight_spec``
-        (decompiled on install, Eq. 19's table encoding).  Shapes and dtypes
+        (decompiled on install, Eq. 19's table encoding).  ``delta`` installs
+        an audited :class:`repro.compile.ProgramDelta` (the two-timescale
+        slow path: controller → compile passes → here).  Shapes and dtypes
         must match the installed tables so the jitted ingest step is reused
         verbatim — a swap never recompiles the hot path.
+
+        The install is measured end-to-end (``two_timescale.atomic_swap``
+        blocks until the new tables are device-ready, Eq. 18's semantics;
+        ``measure_install_time`` takes the wall clock) and the record flags
+        a ``t_cp`` budget violation instead of silently succeeding.
         """
-        t0 = time.perf_counter()
+        from repro.core.two_timescale import atomic_swap, measure_install_time
+
+        source = "manual"
+        if delta is not None:
+            if ruleset is not None or weights is not None:
+                raise ValueError("pass either a ProgramDelta or raw tables, not both")
+            ruleset = delta.ruleset
+            weights, weight_spec = delta.weight_table, delta.weight_spec
+            source = "delta"
         new = ruleset if ruleset is not None else self.rules
         if weights is not None:
             w = (
@@ -411,13 +450,22 @@ class FlowEngine:
                     f"installed {a.shape}/{a.dtype}; shape-changing installs "
                     f"would retrace the hot path (rebuild the engine instead)"
                 )
-        self.rules = new
-        dt = time.perf_counter() - t0
+        installed = {}
+
+        def _install():
+            installed["rules"] = atomic_swap(old, new)
+            return installed["rules"]
+
+        dt = measure_install_time(_install)
+        self.rules = installed["rules"]
         ok = (
             hardware_model.install_time_ok(dt, self.fcfg.t_cp_s)
             if self.fcfg.t_cp_s
             else True
         )
-        rec = SwapRecord(tick=self._tick, install_s=dt, churn_ok=ok)
+        rec = SwapRecord(
+            tick=self._tick, install_s=dt, churn_ok=ok,
+            t_cp_s=self.fcfg.t_cp_s, source=source,
+        )
         self.swap_history.append(rec)
         return rec

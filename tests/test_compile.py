@@ -1,0 +1,390 @@
+"""Dataplane compiler: pass pipeline, resource ledger/budget enforcement,
+program↔legacy deployment equivalence, serialization round trips, and the
+audited two-timescale program-delta path."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compile import (
+    BudgetError,
+    DataplaneProgram,
+    ResourceLedger,
+    compile_delta,
+    compile_program,
+    required_sig_words,
+)
+from repro.configs import get_config
+from repro.core.hardware_model import DEFAULT_DATAPLANE, chimera_resource_report
+from repro.data.pipeline import FlowScenario
+from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+from repro.train import classifier as C
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def classifier(tiny_classifier_cfg):
+    params, _ = C.init_classifier(tiny_classifier_cfg, KEY)
+    return tiny_classifier_cfg, params
+
+
+def _rules_fn(sig_toks=(400, 401, 402, 403)):
+    return lambda c: C.default_rules(c, jnp.asarray(list(sig_toks)))
+
+
+# ==========================================================================
+# Pass 1: signature layout (the deduplicated sig_words workaround)
+# ==========================================================================
+
+class TestSignatureLayout:
+    def test_required_sig_words(self):
+        assert required_sig_words(512, 256) == 8
+        assert required_sig_words(1024, 256) == 24
+        assert required_sig_words(257, 256) == 1
+        assert required_sig_words(256, 256) == 1  # no markers: minimal layout
+        assert required_sig_words(100, 256) == 1
+
+    def test_compile_widens_aliasing_layout(self, classifier):
+        """vocab 1024 with the default 8-word signature aliases markers
+        >= 512 onto the last bit; the signature-layout pass must widen the
+        layout so two distinct high markers stay TCAM-distinguishable."""
+        ccfg, params = classifier
+        wide = dataclasses.replace(
+            ccfg, arch=dataclasses.replace(ccfg.arch, vocab_size=1024)
+        )
+        assert wide.sig_words == 8  # the aliasing default the pass fixes
+        program = compile_program(wide, params, rules=_rules_fn((600, 601)))
+        assert program.ccfg.sig_words == 24
+        toks = jnp.asarray([[600, 0], [1023, 0]], jnp.int32)
+        sig = C.packet_signature(program.ccfg, toks)
+        bits = np.unpackbits(
+            np.asarray(sig).view(np.uint8), axis=-1, bitorder="little"
+        )
+        np.testing.assert_array_equal(np.nonzero(bits[0])[0], [600 - 256])
+        np.testing.assert_array_equal(np.nonzero(bits[1])[0], [1023 - 256])
+
+    def test_rules_built_after_layout_cover_high_markers(self, classifier):
+        """The rules-callable form sees the finalized layout: a hard rule on
+        marker tokens >= 512 actually fires on the matching packet."""
+        ccfg, params = classifier
+        wide = dataclasses.replace(
+            ccfg, arch=dataclasses.replace(ccfg.arch, vocab_size=1024)
+        )
+        program = compile_program(wide, params, rules=_rules_fn((900, 901)))
+        eng = FlowEngine.from_program(program, FlowEngineConfig(capacity=4, lanes=4))
+        out = eng.ingest(np.array([1]), np.asarray([[900, 901, 0, 0]], np.int32))
+        assert bool(out["vetoed"][0]) and float(out["trust"][0]) == 1.0
+        # a different high marker must NOT alias onto the rule
+        out = eng.ingest(np.array([2]), np.asarray([[902, 903, 0, 0]], np.int32))
+        assert not bool(out["vetoed"][0])
+
+    def test_prebuilt_ruleset_width_is_preserved(self, classifier, make_ruleset):
+        ccfg, params = classifier
+        rs = make_ruleset(
+            values=np.zeros((2, 12), np.uint32), masks=np.zeros((2, 12), np.uint32)
+        )
+        program = compile_program(ccfg, params, rules=rs)
+        assert program.ccfg.sig_words == 12  # widened to the ruleset, not cut
+        assert program.rules.values.shape == (2, 12)
+
+
+# ==========================================================================
+# Budget enforcement: BudgetError names the stage; waivers are recorded
+# ==========================================================================
+
+class TestBudgets:
+    def test_overflowing_config_fails_naming_stage(self):
+        """The paper's full operating point (m=256, d_v=64, 16-bit) exceeds
+        the naive 1KB/flow Eq. 11 budget — compile must fail and say where."""
+        full = C.ClassifierConfig(arch=get_config("chimera-dataplane"))
+        with pytest.raises(BudgetError, match="state-quantization") as ei:
+            compile_program(full, params=None)
+        ledger = ei.value.ledger
+        assert ledger is not None and not ledger.fits()
+        assert any(
+            e.stage == "state-quantization" and not e.ok for e in ledger.entries
+        )
+
+    def test_waiver_records_instead_of_raising(self):
+        full = C.ClassifierConfig(arch=get_config("chimera-dataplane"))
+        program = compile_program(
+            full, params=None, waivers=("state-quantization",)
+        )
+        assert program.ledger.fits()  # no *unwaived* violation
+        waived = program.ledger.waived()
+        assert waived and all(e.stage == "state-quantization" for e in waived)
+
+    def test_unknown_waiver_rejected(self, classifier):
+        ccfg, params = classifier
+        with pytest.raises(ValueError, match="no compiler stage"):
+            compile_program(ccfg, params, waivers=("no-such-pass",))
+
+    def test_tcam_overflow_fails_rule_packing(self, classifier, make_ruleset):
+        ccfg, params = classifier
+        tiny_spec = dataclasses.replace(DEFAULT_DATAPLANE, tcam_total_entries=4)
+        rs = make_ruleset(
+            values=np.zeros((5, 8), np.uint32), masks=np.zeros((5, 8), np.uint32)
+        )
+        with pytest.raises(BudgetError, match="rule-packing"):
+            compile_program(ccfg, params, rules=rs, spec=tiny_spec)
+
+    def test_action_bus_overflow_not_masked_by_clipped_fraction(self, classifier):
+        """The bus entry must use raw bits (the report clips fractions to
+        1.0 for rendering, which would silently pass any overflow)."""
+        ccfg, params = classifier
+        tiny_bus = dataclasses.replace(DEFAULT_DATAPLANE, action_bus_bits=1)
+        with pytest.raises(BudgetError, match="action-bus"):
+            compile_program(ccfg, params, spec=tiny_bus)
+
+    @pytest.mark.parametrize("horizon", [100, 128, 1000, 1024, 3000])
+    def test_overflow_horizon_feasible_at_non_pow2(self, classifier, horizon):
+        """The derived s_scale sits at the Eq. 39 boundary; independent
+        rounding of the two divisions must not fail valid horizons."""
+        ccfg, params = classifier
+        program = compile_program(ccfg, params, horizon=horizon)
+        entry = next(
+            e for e in program.ledger.entries if e.resource == "overflow-horizon"
+        )
+        assert entry.ok and entry.budget >= horizon
+
+    def test_overwide_ruleset_rejected(self, classifier, make_ruleset):
+        """Rules caring about bits no packet can set are a layout error,
+        not something to silently truncate."""
+        ccfg, params = classifier
+        rs = make_ruleset(
+            values=np.zeros((1, 64), np.uint32),
+            masks=np.ones((1, 64), np.uint32),
+        )
+        # width 64 > required 8, but masks care: preserved (widened layout)
+        program = compile_program(ccfg, params, rules=rs)
+        assert program.ccfg.sig_words == 64
+
+
+# ==========================================================================
+# Ledger / report machine-readable forms
+# ==========================================================================
+
+class TestLedgerSerialization:
+    def test_resource_report_as_dict(self):
+        rep = chimera_resource_report(
+            m=16, d_v=16, state_bits=16, z_bits=8, window_len=16, d_model=32,
+            window_elem_bits=8, n_global=8, n_hard_rules=1,
+            map_table_entries=16, map_entry_bits=256,
+        )
+        d = rep.as_dict()
+        assert set(d) == {
+            "stateful_bits_per_flow", "sram_fraction", "tcam_fraction",
+            "bus_fraction",
+        }
+        json.dumps(d)  # JSON-safe
+        assert rep.as_row().startswith(str(d["stateful_bits_per_flow"]))
+
+    def test_ledger_json_round_trip(self, classifier):
+        ccfg, params = classifier
+        program = compile_program(ccfg, params, rules=_rules_fn())
+        blob = json.dumps(program.ledger.as_dict())
+        back = ResourceLedger.from_dict(json.loads(blob))
+        assert back.fits() == program.ledger.fits()
+        assert [e.as_dict() for e in back.entries] == [
+            e.as_dict() for e in program.ledger.entries
+        ]
+        assert back.report.as_dict() == program.ledger.report.as_dict()
+        assert set(program.ledger.stages()) == {
+            "signature-layout", "rule-packing", "state-quantization",
+            "kernel-backend", "resource-ledger",
+        }
+
+    def test_overflow_horizon_covers_requested_flow_length(self, classifier):
+        ccfg, params = classifier
+        program = compile_program(ccfg, params, horizon=512)
+        entry = next(
+            e for e in program.ledger.entries if e.resource == "overflow-horizon"
+        )
+        assert entry.ok and entry.budget >= 512
+        assert np.isfinite(program.s_scale) and program.s_scale > 0
+
+
+# ==========================================================================
+# Acceptance: program deployment ≡ legacy construction, exactly
+# ==========================================================================
+
+class TestLegacyEquivalence:
+    def test_program_replay_matches_legacy_exactly(self, classifier):
+        ccfg, params = classifier
+        sc = FlowScenario(kind="mix", pkt_len=8, packets_per_batch=32, seed=3)
+        rules = C.default_rules(ccfg, jnp.asarray(sc.anomaly_signature))
+        fcfg = FlowEngineConfig(capacity=16, lanes=8)
+
+        legacy = FlowEngine(ccfg, params, rules, fcfg)
+        program = compile_program(
+            ccfg, params,
+            rules=lambda c: C.default_rules(c, jnp.asarray(sc.anomaly_signature)),
+        )
+        deployed = FlowEngine.from_program(program, fcfg)
+
+        for _ in range(3):
+            b = sc.next_batch()
+            out_l = legacy.ingest(b["flow_ids"], b["tokens"])
+            out_p = deployed.ingest(b["flow_ids"], b["tokens"])
+            for k in ("trust", "vetoed", "pred", "s_nn", "s_sym"):
+                np.testing.assert_array_equal(
+                    out_l[k], out_p[k], err_msg=f"{k} diverged from legacy"
+                )
+        for fid in deployed.flow_ids():
+            l, p = legacy.flow_scores(fid), deployed.flow_scores(fid)
+            assert l == p, f"flow {fid} snapshot diverged"
+
+    def test_serve_engine_from_program_matches_direct(self, classifier):
+        from repro.serve.engine import Request, ServeEngine
+
+        ccfg, params = classifier
+        program = compile_program(ccfg, params)
+        direct = ServeEngine(ccfg.arch, params["backbone"], batch_slots=2, max_len=64)
+        via_program = ServeEngine.from_program(program, batch_slots=2, max_len=64)
+        r1 = Request(rid=0, prompt=[1, 2, 3, 4], max_new_tokens=4)
+        r2 = Request(rid=0, prompt=[1, 2, 3, 4], max_new_tokens=4)
+        direct.submit(r1)
+        via_program.submit(r2)
+        direct.run_until_done(max_ticks=64)
+        via_program.run_until_done(max_ticks=64)
+        assert r1.generated == r2.generated
+
+
+# ==========================================================================
+# Serialization: compile → save → load → deploy, bit-exact
+# ==========================================================================
+
+@pytest.mark.parametrize(
+    "backend",
+    ["reference", pytest.param("pallas-interpret", marks=pytest.mark.slow)],
+)
+class TestProgramSerialization:
+    def test_save_load_deploy_bit_exact(self, classifier, tmp_path, backend):
+        ccfg, params = classifier
+        sc = FlowScenario(kind="rule-violating", pkt_len=4,
+                          packets_per_batch=8, seed=5)
+        program = compile_program(
+            ccfg, params,
+            rules=lambda c: C.default_rules(c, jnp.asarray(sc.anomaly_signature)),
+            backend=backend,
+        )
+        program.save(str(tmp_path / "prog"))
+        loaded = DataplaneProgram.load(str(tmp_path / "prog"))
+
+        assert loaded.backend == backend
+        assert loaded.ccfg == program.ccfg
+        assert loaded.weight_spec == program.weight_spec
+        assert loaded.ledger.as_dict() == program.ledger.as_dict()
+        for a, b in zip(
+            jax.tree_util.tree_leaves(program.params),
+            jax.tree_util.tree_leaves(loaded.params),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        fcfg = FlowEngineConfig(capacity=8, lanes=4)
+        eng_a = FlowEngine.from_program(program, fcfg)
+        eng_b = FlowEngine.from_program(loaded, fcfg)
+        b = sc.next_batch()
+        out_a = eng_a.ingest(b["flow_ids"], b["tokens"])
+        out_b = eng_b.ingest(b["flow_ids"], b["tokens"])
+        for k in ("trust", "vetoed", "pred", "s_nn", "s_sym"):
+            np.testing.assert_array_equal(out_a[k], out_b[k])
+        for fid in eng_a.flow_ids():
+            assert eng_a.flow_scores(fid) == eng_b.flow_scores(fid)
+
+
+# ==========================================================================
+# Two-timescale program deltas + measured installs
+# ==========================================================================
+
+class TestProgramDelta:
+    def _controller_delta(self, program, new_weights):
+        from repro.core.two_timescale import (
+            TwoTimescaleConfig,
+            TwoTimescaleController,
+        )
+
+        ctl = TwoTimescaleController(
+            TwoTimescaleConfig(t_cp_steps=1, tau_map=0.0), n_centroids=4
+        )
+        key = jax.random.PRNGKey(1)
+        cent = jax.random.normal(key, (4, 8))
+        ctl.observe(np.asarray(jax.random.normal(key, (64, 8)) + 3.0))
+        cent2, rec, delta = ctl.maybe_recluster(
+            1, cent, jnp.zeros(4), key, program=program,
+            new_weights=new_weights,
+        )
+        assert rec is not None and rec.installed
+        return delta
+
+    def test_controller_emits_installable_delta(self, classifier):
+        ccfg, params = classifier
+        program = compile_program(ccfg, params, rules=_rules_fn())
+        new_w = np.asarray(program.rules.weights) * 2.0
+        delta = self._controller_delta(program, new_w)
+        assert delta is not None and delta.ledger.fits()
+
+        eng = FlowEngine.from_program(program, FlowEngineConfig(capacity=8, lanes=4))
+        rec = eng.swap_tables(delta=delta)
+        assert rec.source == "delta" and rec.churn_ok
+        np.testing.assert_allclose(
+            np.asarray(eng.rules.weights), new_w,
+            atol=float(delta.weight_spec.scale),
+        )
+
+    def test_legacy_two_tuple_return_unchanged(self):
+        from repro.core.two_timescale import (
+            TwoTimescaleConfig,
+            TwoTimescaleController,
+        )
+
+        ctl = TwoTimescaleController(
+            TwoTimescaleConfig(t_cp_steps=1, tau_map=0.0), n_centroids=4
+        )
+        key = jax.random.PRNGKey(1)
+        cent = jax.random.normal(key, (4, 8))
+        ctl.observe(np.asarray(jax.random.normal(key, (64, 8))))
+        out = ctl.maybe_recluster(1, cent, jnp.zeros(4), key)
+        assert len(out) == 2
+
+    def test_delta_inherits_program_waivers(self, classifier, make_ruleset):
+        """A violation the operator accepted at compile time must not
+        re-fail on every slow-timescale delta."""
+        ccfg, params = classifier
+        tiny_spec = dataclasses.replace(DEFAULT_DATAPLANE, tcam_total_entries=4)
+        rs = make_ruleset(
+            values=np.zeros((5, 8), np.uint32), masks=np.zeros((5, 8), np.uint32)
+        )
+        program = compile_program(
+            ccfg, params, rules=rs, spec=tiny_spec, waivers=("rule-packing",)
+        )
+        delta = compile_delta(program, weights=np.ones((5,)))  # must not raise
+        assert delta.ledger.fits() and delta.ledger.waived()
+
+    def test_delta_and_raw_tables_mutually_exclusive(self, classifier):
+        ccfg, params = classifier
+        program = compile_program(ccfg, params, rules=_rules_fn())
+        delta = compile_delta(program, weights=np.asarray([1.0]))
+        eng = FlowEngine.from_program(program, FlowEngineConfig(capacity=8, lanes=4))
+        with pytest.raises(ValueError, match="not both"):
+            eng.swap_tables(ruleset=program.rules, delta=delta)
+
+    def test_swap_measures_install_and_flags_tcp_violation(self, classifier):
+        ccfg, params = classifier
+        program = compile_program(ccfg, params, rules=_rules_fn())
+        tight = FlowEngine.from_program(
+            program, FlowEngineConfig(capacity=8, lanes=4, t_cp_s=1e-12)
+        )
+        rec = tight.swap_tables(ruleset=program.rules)
+        assert rec.install_s > 0 and not rec.churn_ok  # violation flagged
+        assert rec.t_cp_s == 1e-12
+        loose = FlowEngine.from_program(
+            program, FlowEngineConfig(capacity=8, lanes=4, t_cp_s=100.0)
+        )
+        rec = loose.swap_tables(ruleset=program.rules)
+        assert rec.churn_ok and rec.t_cp_s == 100.0
