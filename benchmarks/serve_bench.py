@@ -1,21 +1,33 @@
-"""FlowEngine traffic-serving benchmarks.
+"""FlowEngine traffic-serving benchmarks + the CI throughput regression gate.
 
-Streams :class:`FlowScenario` packet arrivals through the flow-table runtime
-and reports packets/sec, resident flows, and eviction rate per kernel
-backend.  Runs standalone (the CI smoke gate) or as the ``serve_flow`` suite
-of ``benchmarks.run``:
+Streams :class:`FlowScenario` packet arrivals through the flow-table
+runtimes and reports packets/sec, resident flows, and eviction rate — per
+kernel backend (``serve_flow``) and per device count for the sharded engine
+(``serve_flow_sharded``: 1/2/4/8 shards, each measured in a subprocess so
+``XLA_FLAGS=--xla_force_host_platform_device_count`` can differ per point).
+Runs standalone (the CI smoke + regression gates) or as suites of
+``benchmarks.run``:
 
     PYTHONPATH=src python -m benchmarks.serve_bench --fast
-    PYTHONPATH=src python -m benchmarks.run --only serve_flow
+    PYTHONPATH=src python -m benchmarks.serve_bench --fast --json BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.serve_bench \
+        --gate BENCH_serve.json --baseline benchmarks/BENCH_serve_baseline.json
+    PYTHONPATH=src python -m benchmarks.run --only serve_flow,serve_flow_sharded
 
-CSV: name,us_per_call,derived — us_per_call is wall-µs per packet.
+CSV: name,us_per_call,derived — us_per_call is wall-µs per packet.  The
+``--gate`` mode compares the ``pps`` field of two ``--json`` dumps and
+fails on a >30% packets/sec regression on any benchmark present in both.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
-from typing import List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +50,16 @@ _SCENARIOS_FULL = (
     "protocol-mix", "port-scan", "burst", "heavy-churn", "rule-violating",
 )
 
+# sharded sweep: device counts measured (each in its own subprocess with
+# that many forced host-platform devices)
+_SHARDS_FAST = (1, 2)
+_SHARDS_FULL = (1, 2, 4, 8)
+
+# >30% pkts/sec drop vs the committed baseline fails the CI gate
+# (SERVE_BENCH_GATE_TOLERANCE overrides, e.g. while calibrating a new
+# runner class whose absolute throughput differs from the baseline's)
+GATE_TOLERANCE = float(os.environ.get("SERVE_BENCH_GATE_TOLERANCE", "0.30"))
+
 
 def _build():
     # n_global=0 so the fused dispatch decode kernel is reachable (the
@@ -51,6 +73,17 @@ def _build():
     ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256)
     params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
     return ccfg, params
+
+
+def _emit(name: str, us_per_pkt: float, pps: float, eng, extra: str = "") -> str:
+    return csv_row(
+        name,
+        us_per_pkt,
+        f"pps={pps:.0f};resident={eng.resident_flows};"
+        f"flows={eng.stats.flows_created};"
+        f"evict_rate={eng.stats.eviction_rate:.2f};"
+        f"state_bytes={eng.resident_state_bytes()}" + extra,
+    )
 
 
 def serve_flow_benchmarks(fast: bool = False) -> List[str]:
@@ -94,25 +127,228 @@ def serve_flow_benchmarks(fast: bool = False) -> List[str]:
                 eng.ingest(b["flow_ids"], b["tokens"])
                 pkts += len(b["flow_ids"])
             dt = time.perf_counter() - t0
-            us_per_pkt = dt / max(pkts, 1) * 1e6
-            rows.append(csv_row(
+            rows.append(_emit(
                 f"serve/flow/{kind}/{backend}",
-                us_per_pkt,
-                f"pps={pkts/dt:.0f};resident={eng.resident_flows};"
-                f"flows={eng.stats.flows_created};"
-                f"evict_rate={eng.stats.eviction_rate:.2f};"
-                f"state_bytes={eng.resident_state_bytes()}",
+                dt / max(pkts, 1) * 1e6, pkts / dt, eng,
             ))
     return rows
+
+
+# --------------------------------------------------------------------------
+# sharded sweep: pkts/sec and resident flows vs device count
+# --------------------------------------------------------------------------
+
+def _sharded_worker_rows(num_shards: int, fast: bool) -> List[str]:
+    """Measure the ShardedFlowEngine at ONE device count (runs inside a
+    subprocess whose XLA_FLAGS forced ``num_shards`` host devices)."""
+    rows: List[str] = []
+    scenarios = ("protocol-mix",) if fast else ("protocol-mix", "heavy-churn")
+    batches = 3 if fast else 6
+    ccfg, params = _build()
+    eng = None
+    for kind in scenarios:
+        # identical traffic at every device count: the scenario does not
+        # depend on num_shards, so pps deltas are placement-only
+        sc = FlowScenario(
+            kind=kind, pkt_len=16,
+            packets_per_batch=256 if fast else 512, seed=7,
+        )
+        if eng is None:
+            program = compile_program(
+                ccfg, params,
+                rules=lambda c: C.default_rules(
+                    c, jnp.asarray(sc.anomaly_signature)
+                ),
+                backend="xla",
+            )
+            eng = program.deploy(
+                FlowEngineConfig(capacity=512 if fast else 1024,
+                                 lanes=128 if fast else 256),
+                num_shards=num_shards,
+            )
+        else:
+            eng.reset()
+        warm = sc.next_batch()
+        eng.ingest(warm["flow_ids"], warm["tokens"])
+        t0 = time.perf_counter()
+        pkts = 0
+        for _ in range(batches):
+            b = sc.next_batch()
+            eng.ingest(b["flow_ids"], b["tokens"])
+            pkts += len(b["flow_ids"])
+        dt = time.perf_counter() - t0
+        rows.append(_emit(
+            f"serve/flow_sharded/{kind}/shards{num_shards}",
+            dt / max(pkts, 1) * 1e6, pkts / dt, eng,
+            extra=(
+                f";shards={num_shards}"
+                f";resident_per_shard="
+                + "/".join(map(str, eng.resident_flows_per_shard()))
+                + f";aggregate_capacity={eng.aggregate_capacity}"
+            ),
+        ))
+    return rows
+
+
+def serve_flow_sharded_benchmarks(fast: bool = False) -> List[str]:
+    """Sweep pkts/sec + resident flows vs device count (1/2/4/8 shards).
+
+    Each point runs ``--sharded-worker N`` in a subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the device
+    count is fixed at jax init, so one process cannot sweep it."""
+    rows: List[str] = []
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for n in _SHARDS_FAST if fast else _SHARDS_FULL:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (os.path.join(repo_root, "src"),
+                        env.get("PYTHONPATH", "")) if p
+        )
+        cmd = [sys.executable, "-m", "benchmarks.serve_bench",
+               "--sharded-worker", str(n)] + (["--fast"] if fast else [])
+        proc = subprocess.run(
+            cmd, capture_output=True, text=True, env=env, cwd=repo_root,
+            timeout=1800,
+        )
+        if proc.returncode != 0:
+            # the ERROR row keeps the sweep's partial results printable,
+            # and main() turns any ERROR row into a nonzero exit so a
+            # broken ShardedFlowEngine fails the CI smoke gate instead of
+            # silently vanishing from the regression gate's name set
+            err_lines = (proc.stderr or "").strip().splitlines()
+            rows.append(csv_row(
+                f"serve/flow_sharded/ERROR/shards{n}", 0.0,
+                err_lines[-1] if err_lines else "worker failed",
+            ))
+            continue
+        rows.extend(
+            line for line in proc.stdout.splitlines()
+            if line.startswith("serve/flow_sharded/")
+        )
+    return rows
+
+
+# --------------------------------------------------------------------------
+# JSON dump + the >30% pkts/sec regression gate
+# --------------------------------------------------------------------------
+
+def rows_to_records(rows: List[str]) -> List[Dict]:
+    """Parse ``name,us_per_call,derived`` rows into JSON-able records (the
+    ``pps`` field is what the regression gate compares)."""
+    records = []
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        rec: Dict = {"name": name, "us_per_call": float(us)}
+        for field in derived.split(";"):
+            k, _, v = field.partition("=")
+            try:
+                rec[k] = float(v) if "." in v else int(v)
+            except ValueError:
+                rec[k] = v
+        records.append(rec)
+    return records
+
+
+def write_json(rows: List[str], path: str) -> None:
+    payload = {
+        "schema": "serve-bench-v1",
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "records": rows_to_records(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check_regression(
+    new_path: str, baseline_path: str, tolerance: float = GATE_TOLERANCE
+) -> List[str]:
+    """Compare two ``--json`` dumps; return a list of failure messages
+    (empty = gate passes).  Only names present in BOTH files are compared,
+    so adding/removing benchmarks never trips the gate."""
+    with open(new_path) as f:
+        new = {r["name"]: r for r in json.load(f)["records"]}
+    with open(baseline_path) as f:
+        base = {r["name"]: r for r in json.load(f)["records"]}
+    failures = []
+    for name in sorted(set(new) & set(base)):
+        b, n = base[name].get("pps"), new[name].get("pps")
+        if not b or n is None:
+            continue
+        if n < (1.0 - tolerance) * b:
+            failures.append(
+                f"{name}: {n:.0f} pkt/s is {(1 - n / b) * 100:.0f}% below "
+                f"baseline {b:.0f} pkt/s (tolerance {tolerance * 100:.0f}%)"
+            )
+    return failures
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump results as machine-readable JSON")
+    ap.add_argument("--suite", default="all",
+                    choices=("flow", "sharded", "all"))
+    ap.add_argument("--sharded-worker", type=int, default=0, metavar="N",
+                    help="(internal) run the N-shard measurement in-process; "
+                         "invoked by the sweep with N forced host devices")
+    ap.add_argument("--gate", default=None, metavar="NEW_JSON",
+                    help="regression-gate mode: compare NEW_JSON against "
+                         "--baseline instead of running benchmarks")
+    ap.add_argument("--baseline", default=None, metavar="BASELINE_JSON")
     args = ap.parse_args()
+
+    if args.gate:
+        if not args.baseline:
+            ap.error("--gate requires --baseline")
+        failures = check_regression(args.gate, args.baseline)
+        if failures:
+            print("serve-bench regression gate FAILED:", file=sys.stderr)
+            for msg in failures:
+                print(f"  {msg}", file=sys.stderr)
+            print(
+                "\nIf this slowdown is expected (intentional trade-off, new "
+                "workload) or the baseline was measured on different "
+                "hardware, refresh it with numbers from the machine class "
+                "the gate runs on: download the BENCH_serve artifact from a "
+                "known-good CI run and commit it as "
+                "benchmarks/BENCH_serve_baseline.json (or regenerate "
+                "locally if the gate runs locally:\n"
+                "  PYTHONPATH=src python -m benchmarks.serve_bench --fast "
+                "--json benchmarks/BENCH_serve_baseline.json).\n"
+                "SERVE_BENCH_GATE_TOLERANCE=0.5 relaxes the gate while "
+                "calibrating a new runner class.",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+        print(f"serve-bench regression gate OK ({args.gate} vs {args.baseline})")
+        return
+
+    if args.sharded_worker:
+        rows = _sharded_worker_rows(args.sharded_worker, fast=args.fast)
+    else:
+        rows = []
+        if args.suite in ("flow", "all"):
+            rows += serve_flow_benchmarks(fast=args.fast)
+        if args.suite in ("sharded", "all"):
+            rows += serve_flow_sharded_benchmarks(fast=args.fast)
     print("name,us_per_call,derived")
-    for row in serve_flow_benchmarks(fast=args.fast):
+    for row in rows:
         print(row, flush=True)
+    if args.json:
+        write_json(rows, args.json)
+    errors = [r for r in rows if "/ERROR/" in r.split(",", 1)[0]]
+    if errors:
+        print(f"{len(errors)} benchmark worker(s) FAILED:", file=sys.stderr)
+        for r in errors:
+            print(f"  {r}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

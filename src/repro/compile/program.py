@@ -64,6 +64,31 @@ class DataplaneProgram:
         return self.ccfg.arch
 
     # ------------------------------------------------------------------
+    # deployment (front door onto the serving runtimes)
+    # ------------------------------------------------------------------
+    def deploy(self, fcfg=None, *, mesh=None, num_shards: Optional[int] = None):
+        """Deploy onto the flow-table runtime.
+
+        With neither ``mesh`` nor ``num_shards``: a single-device
+        :class:`~repro.serve.flow_engine.FlowEngine` (unchanged fast
+        path).  With either: a :class:`~repro.serve.sharded_flow_engine
+        .ShardedFlowEngine` partitioned over the mesh ``data`` axis, with
+        the per-shard Eq. 11 flow-table budget recorded in this program's
+        ledger (``fcfg.capacity`` is then per shard; aggregate capacity is
+        shards × per-shard).
+        """
+        from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+
+        fcfg = fcfg if fcfg is not None else FlowEngineConfig()
+        if mesh is None and num_shards is None:
+            return FlowEngine.from_program(self, fcfg)
+        from repro.serve.sharded_flow_engine import ShardedFlowEngine
+
+        return ShardedFlowEngine.from_program(
+            self, fcfg, mesh=mesh, num_shards=num_shards
+        )
+
+    # ------------------------------------------------------------------
     # serialization (atomic, via the Checkpointer)
     # ------------------------------------------------------------------
     def _array_tree(self) -> Dict[str, Any]:

@@ -46,6 +46,26 @@ def _traffic_tables(
     return handshake, kernel, signature, anomaly_sig
 
 
+def flow_shard(fids, num_shards: int) -> np.ndarray:
+    """Deterministic flow → shard owner: ``splitmix64(fid) % num_shards``.
+
+    A fixed 64-bit mix rather than Python ``hash`` so routing is stable
+    across processes, batch sizes and batch resizes — a flow's owner
+    depends only on its ID and the shard count, never on arrival order.
+    Shared by :class:`repro.serve.sharded_flow_engine.ShardedFlowEngine`
+    (scatter side) and :class:`FlowScenario` sharded generation (traffic
+    side) so both agree on ownership.  Returns an int64 array of shard
+    indices in ``[0, num_shards)``."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    z = np.atleast_1d(np.asarray(fids)).astype(np.uint64)
+    z = z + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    return (z % np.uint64(num_shards)).astype(np.int64)
+
+
 def arrival_rounds(keys) -> "list[list[int]]":
     """Partition arrival-ordered items into rounds where every key appears at
     most once, preserving per-key order (round r holds each key's r-th
@@ -243,6 +263,14 @@ class FlowScenario:
     # packets_per_batch-bounded emission path retires, so without a ceiling
     # the host-side flow dict grows for the generator's lifetime
     max_active: int = 8192
+    # shard-aware generation: every shard runs the FULL generator (same
+    # seed, same flow population, same chain states — the RNG draw order
+    # never depends on the shard) and emits only the packets whose
+    # flow_shard owner is shard_id.  The union of the num_shards streams is
+    # exactly the num_shards=1 stream, packet for packet, so sharded and
+    # single-device runs replay identical traffic.
+    shard_id: int = 0
+    num_shards: int = 1
     step: int = 0
 
     def __post_init__(self):
@@ -250,6 +278,10 @@ class FlowScenario:
             raise ValueError(
                 f"unknown scenario kind {self.kind!r}; "
                 f"expected 'mix' or one of {sorted(SCENARIO_KINDS)}"
+            )
+        if not 0 <= self.shard_id < self.num_shards:
+            raise ValueError(
+                f"shard_id {self.shard_id} outside [0, {self.num_shards})"
             )
         self._handshake, self._kernel, self._signature, self._anomaly_sig = (
             _traffic_tables(self.seed, self.n_classes, self.vocab_size, self.hard_mode)
@@ -361,13 +393,20 @@ class FlowScenario:
             del self._active[fid]
             self.flows_retired += 1
         self.step += 1
-        return {
-            "flow_ids": np.asarray(emit, np.int64),
+        fids = np.asarray(emit, np.int64)
+        batch = {
+            "flow_ids": fids,
             "tokens": tokens,
             "labels": labels,
             "anomalous": anomalous,
             "first_packet": first,
         }
+        if self.num_shards > 1:
+            # filter AFTER every state update so the generator evolves
+            # identically for all (shard_id, num_shards) settings
+            keep = flow_shard(fids, self.num_shards) == self.shard_id
+            batch = {k: v[keep] for k, v in batch.items()}
+        return batch
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         while True:

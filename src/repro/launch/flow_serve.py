@@ -3,11 +3,18 @@ deploy it on the flow-table runtime, stream FlowScenario packets through it.
 
     PYTHONPATH=src python -m repro.launch.flow_serve --scenario port-scan \
         --batches 8 --capacity 2048 [--backend pallas-interpret] [--ledger]
+
+Scale-out: ``--num-shards N`` deploys a ShardedFlowEngine over N devices
+(the mesh ``data`` axis).  On CPU hosts pass ``--host-devices N`` (or set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) to expose N
+devices; ``--capacity`` is then per shard.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 
@@ -31,7 +38,26 @@ def main() -> None:
                     help="serialize the compiled program via the Checkpointer")
     ap.add_argument("--ledger", action="store_true",
                     help="print the per-stage resource ledger")
+    ap.add_argument("--num-shards", type=int, default=0,
+                    help="shard the flow table over N devices (mesh 'data' "
+                         "axis); 0 = single-device FlowEngine")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N XLA host-platform (CPU) devices; must be "
+                         "set before jax initializes, so prefer this flag "
+                         "over exporting XLA_FLAGS by hand")
     args = ap.parse_args()
+
+    if args.host_devices:
+        if "jax" in sys.modules:
+            raise RuntimeError(
+                "--host-devices must be applied before jax is imported; "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{args.host_devices} in the environment instead"
+            )
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}"
+        ).strip()
 
     import dataclasses
 
@@ -69,10 +95,10 @@ def main() -> None:
     if args.save_program:
         program.save(args.save_program)
         print(f"program saved to {args.save_program}")
-    engine = FlowEngine.from_program(
-        program,
-        FlowEngineConfig(capacity=args.capacity, lanes=args.lanes,
-                         idle_timeout=args.idle_timeout),
+    fcfg = FlowEngineConfig(capacity=args.capacity, lanes=args.lanes,
+                            idle_timeout=args.idle_timeout)
+    engine = program.deploy(
+        fcfg, num_shards=args.num_shards if args.num_shards else None
     )
 
     t0 = time.perf_counter()
@@ -83,14 +109,21 @@ def main() -> None:
         pkts += len(batch["flow_ids"])
     dt = time.perf_counter() - t0
     s = engine.stats
+    capacity = getattr(engine, "aggregate_capacity", args.capacity)
+    budget = getattr(
+        engine, "aggregate_state_budget_bytes", engine.state_budget_bytes
+    )
+    shards = (
+        f" shards={engine.num_shards}" if args.num_shards else ""
+    )
     print(
         f"{args.scenario}: {pkts} packets / {s.flows_created} flows in "
         f"{dt:.2f}s = {pkts/dt:.0f} pkt/s ({pkts*args.pkt_len/dt:.0f} tok/s) | "
-        f"backend={engine.backend} resident={engine.resident_flows}"
-        f"/{args.capacity} evicted={s.flows_evicted} "
+        f"backend={engine.backend}{shards} resident={engine.resident_flows}"
+        f"/{capacity} evicted={s.flows_evicted} "
         f"(rate {s.eviction_rate:.2f}/tick) | "
         f"state={engine.resident_state_bytes()/2**20:.1f}MiB "
-        f"of {engine.state_budget_bytes/2**20:.0f}MiB budget"
+        f"of {budget/2**20:.0f}MiB budget"
     )
 
 

@@ -41,3 +41,37 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
     if multi_pod:
         return _mesh((2, n_data, n_model), ("pod", "data", "model"))
     return _mesh((n_data, n_model), ("data", "model"))
+
+
+def make_flow_mesh(num_shards: "int | None" = None):
+    """1-D ``('data',)`` mesh for sharded flow serving: one shard of the
+    flow table per device.  ``num_shards`` defaults to every local device
+    (on CPU, set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before the first jax import to get N devices)."""
+    avail = len(jax.devices())
+    n = avail if num_shards is None else num_shards
+    if n > avail:
+        raise ValueError(
+            f"num_shards={n} exceeds the {avail} visible device(s); on CPU "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n}"
+        )
+    return _mesh((n,), ("data",))
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on
+    <=0.4.x — with replication checking off in both (mirrors the
+    test_distributed subprocess harnesses; flow-table placement is
+    explicit, so the checker adds nothing but version skew)."""
+    try:
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    except (AttributeError, TypeError):
+        from jax.experimental.shard_map import shard_map
+
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )

@@ -1,1 +1,3 @@
-"""Serving: batched decode engine with bounded Chimera state."""
+"""Serving: batched decode engine with bounded Chimera state; flow-table
+streaming runtimes (single-device FlowEngine, multi-device
+ShardedFlowEngine partitioned over the mesh ``data`` axis)."""

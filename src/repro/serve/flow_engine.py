@@ -83,6 +83,175 @@ class SwapRecord:
     source: str = "manual"  # "manual" | "delta" (audited ProgramDelta)
 
 
+def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int):
+    """Build the jitted flow-table update step over ``n_slots`` table rows.
+
+    One arrival round of lanes: gather the touched rows (lazily zeroing
+    freshly-allocated slots), scan the packet tokens through
+    :func:`repro.models.model.decode_hidden_step`, accumulate the packed
+    marker signature, score via :func:`repro.train.classifier
+    .streaming_scores`, scatter the rows back.  Module-level so
+    :class:`FlowEngine` and :class:`repro.serve.sharded_flow_engine
+    .ShardedFlowEngine` run the *same* traced function — one shard of a
+    sharded table is exactly a single-device table, which is what makes
+    sharded replay bit-identical to single-device replay.
+    """
+    arch = ccfg.arch
+
+    def slotted(c) -> bool:
+        return c.ndim >= 2 and c.shape[1] == n_slots
+
+    def step(params, rules, caches, positions, sig, hidden_sum, vetoed,
+             idx, tokens, fresh):
+        # gather the touched rows; zero lanes holding newly-alloc'd flows
+        # (slot reuse after eviction must look like a fresh table entry)
+        def take(c):
+            if not slotted(c):
+                return c
+            f = fresh.reshape((1, -1) + (1,) * (c.ndim - 2))
+            return jnp.where(f, jnp.zeros_like(c[:, idx]), c[:, idx])
+
+        cs = jax.tree_util.tree_map(take, caches)
+        pos = jnp.where(fresh, 0, positions[idx])
+        sg = jnp.where(fresh[:, None], jnp.uint32(0), sig[idx])
+        hs = jnp.where(fresh[:, None], 0.0, hidden_sum[idx])
+        vt = jnp.where(fresh, False, vetoed[idx])
+
+        def body(carry, tok_t):
+            cs, pos, hs = carry
+            h, cs = M.decode_hidden_step(arch, params["backbone"], tok_t, pos, cs)
+            return (cs, pos + 1, hs + h.astype(jnp.float32)), None
+
+        (cs, pos, hs), _ = jax.lax.scan(body, (cs, pos, hs), tokens.T)
+        sg = sg | C.packet_signature(ccfg, tokens)
+        pooled = hs / jnp.maximum(pos, 1)[:, None].astype(jnp.float32)
+        out, vt = C.streaming_scores(ccfg, params, rules, pooled, sg, vt)
+
+        def put(c, u):
+            return c.at[:, idx].set(u) if slotted(c) else c
+
+        caches = jax.tree_util.tree_map(put, caches, cs)
+        positions = positions.at[idx].set(pos)
+        sig = sig.at[idx].set(sg)
+        hidden_sum = hidden_sum.at[idx].set(hs)
+        vetoed = vetoed.at[idx].set(vt)
+        return caches, positions, sig, hidden_sum, vetoed, out
+
+    return step
+
+
+class FlowTableDirectory:
+    """Host-side slot allocator for one flow table (or one shard of one):
+    fid → slot map, free list, LRU timestamps.  Owns no device state — the
+    caller pairs it with the slot-batched arrays the jitted step updates.
+    Extracted from :class:`FlowEngine` so :class:`~repro.serve
+    .sharded_flow_engine.ShardedFlowEngine` runs one directory per shard
+    with identical allocation/eviction semantics."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.slot_of: Dict[int, int] = {}
+        self.fid_of: Dict[int, int] = {}
+        self.free: List[int] = list(range(capacity - 1, -1, -1))
+        self.last_seen = np.full((capacity,), np.iinfo(np.int64).max, np.int64)
+
+    @property
+    def resident(self) -> int:
+        return len(self.slot_of)
+
+    def touch(self, fid: int, tick: int) -> bool:
+        """Refresh a resident flow's LRU stamp; False if not resident."""
+        slot = self.slot_of.get(fid)
+        if slot is None:
+            return False
+        self.last_seen[slot] = tick
+        return True
+
+    def slot_for(self, fid: int, tick: int) -> Tuple[int, bool, bool]:
+        """Resolve ``fid`` to a table slot, allocating (free list, else LRU
+        victim) when absent.  Returns ``(slot, fresh, lru_evicted)``."""
+        slot = self.slot_of.get(fid)
+        if slot is not None:
+            self.last_seen[slot] = tick
+            return slot, False, False
+        evicted = False
+        if self.free:
+            slot = self.free.pop()
+        else:
+            slot = int(np.argmin(self.last_seen))  # LRU victim
+            del self.slot_of[self.fid_of[slot]]
+            evicted = True
+        self.slot_of[fid] = slot
+        self.fid_of[slot] = fid
+        self.last_seen[slot] = tick
+        return slot, True, evicted
+
+    def evict(self, fid: int) -> bool:
+        slot = self.slot_of.pop(fid, None)
+        if slot is None:
+            return False
+        del self.fid_of[slot]
+        self.last_seen[slot] = np.iinfo(np.int64).max
+        self.free.append(slot)
+        return True
+
+    def idle_victims(self, horizon: int) -> List[int]:
+        """Flows whose last packet predates ``horizon`` (exclusive)."""
+        return [f for f, s in self.slot_of.items() if self.last_seen[s] < horizon]
+
+    def reset(self) -> None:
+        self.slot_of.clear()
+        self.fid_of.clear()
+        self.free = list(range(self.capacity - 1, -1, -1))
+        self.last_seen[:] = np.iinfo(np.int64).max
+
+
+def resolve_swap(
+    old: symbolic.RuleSet,
+    ruleset: Optional[symbolic.RuleSet],
+    weights,
+    weight_spec,
+    delta,
+) -> Tuple[symbolic.RuleSet, str]:
+    """Resolve a ``swap_tables`` request into the RuleSet to install.
+
+    Accepts either raw tables (``ruleset`` and/or ``weights`` — float or a
+    quantized Eq. 19 SRAM table plus its ``FixedPointSpec``) or an audited
+    :class:`repro.compile.ProgramDelta`, and shape/dtype-checks the result
+    against the installed tables so the jitted ingest step is reused
+    verbatim — a swap never recompiles the hot path.  Shared by
+    :class:`FlowEngine` and the sharded engine (identical install
+    semantics; only the placement differs).  Returns ``(new, source)``.
+    """
+    source = "manual"
+    if delta is not None:
+        if ruleset is not None or weights is not None:
+            raise ValueError("pass either a ProgramDelta or raw tables, not both")
+        ruleset = delta.ruleset
+        weights, weight_spec = delta.weight_table, delta.weight_spec
+        source = "delta"
+    new = ruleset if ruleset is not None else old
+    if weights is not None:
+        w = (
+            symbolic.decompile_table(weights, weight_spec)
+            if weight_spec is not None
+            else jnp.asarray(weights, jnp.float32)
+        )
+        new = symbolic.RuleSet(
+            values=new.values, masks=new.masks,
+            weights=w.astype(jnp.float32), hard=new.hard,
+        )
+    for name in ("values", "masks", "weights", "hard"):
+        a, b = getattr(old, name), getattr(new, name)
+        if a.shape != b.shape or a.dtype != b.dtype:
+            raise ValueError(
+                f"swap_tables: {name} {b.shape}/{b.dtype} does not match "
+                f"installed {a.shape}/{a.dtype}; shape-changing installs "
+                f"would retrace the hot path (rebuild the engine instead)"
+            )
+    return new, source
+
+
 class FlowEngine:
     """Streaming per-flow classification over a bounded flow table."""
 
@@ -117,10 +286,7 @@ class FlowEngine:
         self.vetoed = jnp.zeros((self._n_slots,), bool)
 
         # host-side table bookkeeping
-        self._slot_of: Dict[int, int] = {}
-        self._fid_of: Dict[int, int] = {}
-        self._free: List[int] = list(range(fcfg.capacity - 1, -1, -1))
-        self._last_seen = np.full((fcfg.capacity,), np.iinfo(np.int64).max, np.int64)
+        self.table = FlowTableDirectory(fcfg.capacity)
         self._tick = 0
 
         # Eq. 11 budget check, enforced at construction so an over-provisioned
@@ -155,6 +321,12 @@ class FlowEngine:
             fcfg = dataclasses.replace(fcfg, backend=program.backend)
         eng = cls(program.ccfg, program.params, program.rules, fcfg)
         eng.program = program
+        # a single-device deploy supersedes any earlier sharded placement:
+        # drop the stale audit entry so the ledger describes the active
+        # deployment (the sharded path records its own on each deploy)
+        program.ledger.entries = [
+            e for e in program.ledger.entries if e.stage != "flow-table-sharding"
+        ]
         return eng
 
     # ------------------------------------------------------------------
@@ -185,79 +357,27 @@ class FlowEngine:
 
     @property
     def resident_flows(self) -> int:
-        return len(self._slot_of)
+        return self.table.resident
 
     def flow_ids(self) -> List[int]:
-        return list(self._slot_of)
+        return list(self.table.slot_of)
 
     # ------------------------------------------------------------------
     # jitted hot path
     # ------------------------------------------------------------------
     def _make_step(self):
-        ccfg = self.ccfg
-        arch = ccfg.arch
-        n_slots = self._n_slots
-
-        def slotted(c) -> bool:
-            return c.ndim >= 2 and c.shape[1] == n_slots
-
-        def step(params, rules, caches, positions, sig, hidden_sum, vetoed,
-                 idx, tokens, fresh):
-            # gather the touched rows; zero lanes holding newly-alloc'd flows
-            # (slot reuse after eviction must look like a fresh table entry)
-            def take(c):
-                if not slotted(c):
-                    return c
-                f = fresh.reshape((1, -1) + (1,) * (c.ndim - 2))
-                return jnp.where(f, jnp.zeros_like(c[:, idx]), c[:, idx])
-
-            cs = jax.tree_util.tree_map(take, caches)
-            pos = jnp.where(fresh, 0, positions[idx])
-            sg = jnp.where(fresh[:, None], jnp.uint32(0), sig[idx])
-            hs = jnp.where(fresh[:, None], 0.0, hidden_sum[idx])
-            vt = jnp.where(fresh, False, vetoed[idx])
-
-            def body(carry, tok_t):
-                cs, pos, hs = carry
-                h, cs = M.decode_hidden_step(arch, params["backbone"], tok_t, pos, cs)
-                return (cs, pos + 1, hs + h.astype(jnp.float32)), None
-
-            (cs, pos, hs), _ = jax.lax.scan(body, (cs, pos, hs), tokens.T)
-            sg = sg | C.packet_signature(ccfg, tokens)
-            pooled = hs / jnp.maximum(pos, 1)[:, None].astype(jnp.float32)
-            out, vt = C.streaming_scores(ccfg, params, rules, pooled, sg, vt)
-
-            def put(c, u):
-                return c.at[:, idx].set(u) if slotted(c) else c
-
-            caches = jax.tree_util.tree_map(put, caches, cs)
-            positions = positions.at[idx].set(pos)
-            sig = sig.at[idx].set(sg)
-            hidden_sum = hidden_sum.at[idx].set(hs)
-            vetoed = vetoed.at[idx].set(vt)
-            return caches, positions, sig, hidden_sum, vetoed, out
-
-        return step
+        return make_flow_step(self.ccfg, self._n_slots)
 
     # ------------------------------------------------------------------
     # flow-table bookkeeping (host side)
     # ------------------------------------------------------------------
     def _slot_for(self, fid: int) -> Tuple[int, bool]:
-        slot = self._slot_of.get(fid)
-        if slot is not None:
-            self._last_seen[slot] = self._tick
-            return slot, False
-        if self._free:
-            slot = self._free.pop()
-        else:
-            slot = int(np.argmin(self._last_seen))  # LRU victim
-            del self._slot_of[self._fid_of[slot]]
+        slot, fresh, evicted = self.table.slot_for(fid, self._tick)
+        if evicted:
             self.stats.flows_evicted_lru += 1
-        self._slot_of[fid] = slot
-        self._fid_of[slot] = fid
-        self._last_seen[slot] = self._tick
-        self.stats.flows_created += 1
-        return slot, True
+        if fresh:
+            self.stats.flows_created += 1
+        return slot, fresh
 
     def reset(self) -> None:
         """Clear the flow table without touching the jitted step.
@@ -266,31 +386,21 @@ class FlowEngine:
         rewritten — reused slots are lazily zeroed by the per-lane ``fresh``
         flag, so a reset engine keeps its compiled hot path (benchmarks
         sweep scenarios on one engine instead of re-jitting per scenario)."""
-        self._slot_of.clear()
-        self._fid_of.clear()
-        self._free = list(range(self.fcfg.capacity - 1, -1, -1))
-        self._last_seen[:] = np.iinfo(np.int64).max
+        self.table.reset()
         self._tick = 0
         self.stats = FlowStats()
 
     def evict(self, fid: int) -> bool:
         """Drop a flow's table entry (state is lazily zeroed on slot reuse)."""
-        slot = self._slot_of.pop(fid, None)
-        if slot is None:
-            return False
-        del self._fid_of[slot]
-        self._last_seen[slot] = np.iinfo(np.int64).max
-        self._free.append(slot)
-        return True
+        return self.table.evict(fid)
 
     def evict_idle(self) -> int:
         """Evict flows idle for more than ``idle_timeout`` ticks."""
         if not self.fcfg.idle_timeout:
             return 0
-        horizon = self._tick - self.fcfg.idle_timeout
-        stale = [f for f, s in self._slot_of.items() if self._last_seen[s] < horizon]
+        stale = self.table.idle_victims(self._tick - self.fcfg.idle_timeout)
         for fid in stale:
-            self.evict(fid)
+            self.table.evict(fid)
             self.stats.flows_evicted_idle += 1
         return len(stale)
 
@@ -321,9 +431,7 @@ class FlowEngine:
         # table has entries is evicting an in-batch flow unavoidable (state
         # loss on eviction is inherent to a bounded table).
         for fid in set(flow_ids.tolist()):
-            slot = self._slot_of.get(fid)
-            if slot is not None:
-                self._last_seen[slot] = self._tick
+            self.table.touch(fid, self._tick)
         self.evict_idle()
 
         slots = np.empty((P,), np.int32)
@@ -380,7 +488,7 @@ class FlowEngine:
     # ------------------------------------------------------------------
     def flow_scores(self, fid: int) -> Dict[str, float]:
         """Current scores for a resident flow (control-plane read path)."""
-        slot = self._slot_of[fid]
+        slot = self.table.slot_of[fid]
         pooled = self.hidden_sum[slot] / jnp.maximum(self.positions[slot], 1)
         out, _ = C.streaming_scores(
             self.ccfg, self.params, self.rules,
@@ -423,33 +531,8 @@ class FlowEngine:
         """
         from repro.core.two_timescale import atomic_swap, measure_install_time
 
-        source = "manual"
-        if delta is not None:
-            if ruleset is not None or weights is not None:
-                raise ValueError("pass either a ProgramDelta or raw tables, not both")
-            ruleset = delta.ruleset
-            weights, weight_spec = delta.weight_table, delta.weight_spec
-            source = "delta"
-        new = ruleset if ruleset is not None else self.rules
-        if weights is not None:
-            w = (
-                symbolic.decompile_table(weights, weight_spec)
-                if weight_spec is not None
-                else jnp.asarray(weights, jnp.float32)
-            )
-            new = symbolic.RuleSet(
-                values=new.values, masks=new.masks,
-                weights=w.astype(jnp.float32), hard=new.hard,
-            )
         old = self.rules
-        for name in ("values", "masks", "weights", "hard"):
-            a, b = getattr(old, name), getattr(new, name)
-            if a.shape != b.shape or a.dtype != b.dtype:
-                raise ValueError(
-                    f"swap_tables: {name} {b.shape}/{b.dtype} does not match "
-                    f"installed {a.shape}/{a.dtype}; shape-changing installs "
-                    f"would retrace the hot path (rebuild the engine instead)"
-                )
+        new, source = resolve_swap(old, ruleset, weights, weight_spec, delta)
         installed = {}
 
         def _install():

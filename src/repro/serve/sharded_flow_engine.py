@@ -1,0 +1,473 @@
+"""Sharded multi-device flow serving (DESIGN.md §12).
+
+Scale-out of the :class:`~repro.serve.flow_engine.FlowEngine` flow table:
+the flow-keyed Chimera state is partitioned into ``num_shards`` independent
+shards, one per device on the ``data`` axis of a :func:`repro.launch.mesh
+.make_flow_mesh` mesh, executed together under ``shard_map``.  Aggregate
+resident-flow capacity and packets/sec scale with device count while every
+per-flow guarantee of the single-device engine is preserved verbatim:
+
+* **Routing** is deterministic and batch-independent —
+  ``flow_shard(fid) % num_shards`` (a fixed splitmix64 mix, stable across
+  processes and batch resizes), so a flow's packets always land on the
+  same shard and its state never migrates.
+* **Per-shard tables**: each shard owns a
+  :class:`~repro.serve.flow_engine.FlowTableDirectory` (LRU + idle
+  eviction, bounded capacity) and its slice of the slot-batched device
+  state.  Sticky TCAM veto bits live in the shard that owns the flow.
+* **One batched hot path**: ``ingest`` scatters each arrival round to its
+  owner shards as a single ``(num_shards, lanes)`` launch of the *same*
+  :func:`~repro.serve.flow_engine.make_flow_step` function the
+  single-device engine jits — one ``shard_map``-ped call per round, one
+  host gather of the stacked outputs, no per-shard host round trips.
+  Because the per-lane math is the identical traced function, sharded
+  replay is bit-identical to single-device replay of the same traffic.
+* **Replicated control plane**: params and rule tables are placed
+  replicated over the mesh; :meth:`ShardedFlowEngine.swap_tables` installs
+  a new RuleSet / quantized weight table / audited ``ProgramDelta``
+  atomically on *all* shards in one measured install, so the Eq. 18
+  ``t_cp`` accounting covers the sharded case end-to-end.
+* **Per-shard budgets**: the Eq. 11 flow-table byte budget is enforced per
+  shard at construction; aggregate capacity is reported as
+  ``num_shards x per-shard budget`` (and recorded in the program's
+  :class:`~repro.compile.ledger.ResourceLedger` on deploy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hardware_model
+from repro.core import symbolic
+from repro.core.hardware_model import DEFAULT_DATAPLANE
+from repro.data.pipeline import arrival_rounds, flow_shard
+from repro.models import model as M
+from repro.serve.flow_engine import (
+    FlowEngineConfig,
+    FlowStats,
+    FlowTableDirectory,
+    SwapRecord,
+    make_flow_step,
+    resolve_swap,
+)
+from repro.train import classifier as C
+
+
+class ShardedFlowEngine:
+    """Flow-table streaming inference partitioned across a device mesh.
+
+    Drop-in for :class:`~repro.serve.flow_engine.FlowEngine` (same
+    ``ingest`` / ``flow_scores`` / ``swap_tables`` / stats surface) with
+    the table sharded over the mesh ``data`` axis.  ``fcfg.capacity`` and
+    ``fcfg.state_budget_bytes`` are *per shard*; aggregate capacity is
+    ``num_shards * fcfg.capacity``.
+    """
+
+    def __init__(
+        self,
+        ccfg: C.ClassifierConfig,
+        params,
+        rules: symbolic.RuleSet,
+        fcfg: FlowEngineConfig = FlowEngineConfig(),
+        *,
+        mesh=None,
+        num_shards: Optional[int] = None,
+    ):
+        from repro.kernels.dispatch import apply_kernel_backend
+        from repro.launch.mesh import make_flow_mesh, shard_map_compat
+
+        if mesh is None:
+            mesh = make_flow_mesh(num_shards)
+        if "data" not in mesh.axis_names:
+            raise ValueError(
+                f"flow serving shards over 'data'; mesh axes are {mesh.axis_names}"
+            )
+        S = int(mesh.shape["data"])
+        if math.prod(mesh.devices.shape) != S:
+            raise ValueError(
+                "flow tables shard only over 'data'; every other mesh axis "
+                f"must have size 1 (got mesh shape {dict(mesh.shape)})"
+            )
+        if num_shards is not None and num_shards != S:
+            raise ValueError(
+                f"num_shards={num_shards} but the mesh 'data' axis has {S} devices"
+            )
+        self.mesh = mesh
+        self.num_shards = S
+
+        arch, self.backend = apply_kernel_backend(ccfg.arch, fcfg.backend)
+        self.ccfg = dataclasses.replace(ccfg, arch=arch)
+        self.fcfg = fcfg
+        self.stats = FlowStats()
+        self.swap_history: List[SwapRecord] = []
+        self.program = None  # set by from_program
+
+        self._replicated = NamedSharding(mesh, P())
+        self._row_sharded = NamedSharding(mesh, P("data"))
+        self.params = jax.device_put(params, self._replicated)
+        self.rules = jax.device_put(rules, self._replicated)
+
+        # per-shard slot-batched state (capacity real slots + one scratch
+        # slot absorbing padding lanes), stacked on a leading shard axis
+        # that shard_map splits over 'data'
+        self._n_slots = fcfg.capacity + 1
+
+        def shardwise(c):
+            return jax.device_put(
+                jnp.broadcast_to(c[None], (S,) + c.shape), self._row_sharded
+            )
+
+        caches = M.init_caches(
+            arch, self._n_slots, fcfg.max_flow_tokens, dtype=jnp.float32
+        )
+        self.caches = jax.tree_util.tree_map(shardwise, caches)
+        W, d = self.ccfg.sig_words, arch.d_model
+        self.positions = shardwise(jnp.zeros((self._n_slots,), jnp.int32))
+        self.sig = shardwise(jnp.zeros((self._n_slots, W), jnp.uint32))
+        self.hidden_sum = shardwise(jnp.zeros((self._n_slots, d), jnp.float32))
+        self.vetoed = shardwise(jnp.zeros((self._n_slots,), bool))
+
+        # one host-side directory per shard: allocation, LRU and idle
+        # eviction are shard-local (a flow only ever competes for slots
+        # with flows routed to the same shard)
+        self.tables = [FlowTableDirectory(fcfg.capacity) for _ in range(S)]
+        self._tick = 0
+
+        # Eq. 11 budget, enforced PER SHARD at construction: each device's
+        # table slice must fit the per-shard SRAM budget on its own
+        budget = fcfg.state_budget_bytes or DEFAULT_DATAPLANE.sram_total_bits // 8
+        self.state_budget_bytes = budget  # per shard
+        hardware_model.check_flow_table_budget(
+            self._n_slots, self.per_flow_state_bytes(), budget
+        )
+
+        step = make_flow_step(self.ccfg, self._n_slots)
+
+        def shard_step(params, rules, caches, positions, sig, hidden_sum,
+                       vetoed, idx, tokens, fresh):
+            # inside shard_map every table arg carries a leading shard axis
+            # of size 1 (this device's rows); params/rules arrive replicated
+            def sq(t):
+                return jax.tree_util.tree_map(lambda x: x[0], t)
+
+            caches, positions, sig, hidden_sum, vetoed, out = step(
+                params, rules, sq(caches), positions[0], sig[0],
+                hidden_sum[0], vetoed[0], idx[0], tokens[0], fresh[0],
+            )
+
+            def ex(t):
+                return jax.tree_util.tree_map(lambda x: x[None], t)
+
+            return (ex(caches), positions[None], sig[None], hidden_sum[None],
+                    vetoed[None], ex(out))
+
+        smap = shard_map_compat(
+            shard_step, mesh,
+            in_specs=(P(), P(), P("data"), P("data"), P("data"), P("data"),
+                      P("data"), P("data"), P("data"), P("data")),
+            out_specs=(P("data"),) * 6,
+        )
+        self._jit_step = jax.jit(smap, donate_argnums=(2, 3, 4, 5, 6))
+
+    # ------------------------------------------------------------------
+    # compiled-program deployment
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_program(
+        cls,
+        program,
+        fcfg: FlowEngineConfig = FlowEngineConfig(),
+        *,
+        mesh=None,
+        num_shards: Optional[int] = None,
+    ) -> "ShardedFlowEngine":
+        """Deploy a compiled :class:`repro.compile.DataplaneProgram` sharded
+        over the mesh ``data`` axis.
+
+        The per-shard Eq. 11 flow-table budget check runs at construction;
+        the resulting per-shard usage (and the shards × budget aggregate)
+        is recorded in the program's :class:`ResourceLedger` so the deploy
+        audit trail covers the sharded placement.
+        """
+        if fcfg.backend is None and program.backend is not None:
+            fcfg = dataclasses.replace(fcfg, backend=program.backend)
+        eng = cls(
+            program.ccfg, program.params, program.rules, fcfg,
+            mesh=mesh, num_shards=num_shards,
+        )
+        eng.program = program
+        ledger = program.ledger
+        # re-deploys refresh (not duplicate) the placement entry
+        ledger.entries = [
+            e for e in ledger.entries if e.stage != "flow-table-sharding"
+        ]
+        ledger.add(
+            "flow-table-sharding", "per-shard-table-bytes",
+            used=eng.shard_state_bytes(), budget=eng.state_budget_bytes,
+            detail=(
+                f"{eng.num_shards} shard(s) x {fcfg.capacity} flows/shard; "
+                f"aggregate capacity {eng.aggregate_capacity} flows, "
+                f"aggregate budget {eng.aggregate_state_budget_bytes} B"
+            ),
+        )
+        ledger.raise_if_over()
+        return eng
+
+    # ------------------------------------------------------------------
+    # routing + state accounting
+    # ------------------------------------------------------------------
+    def shard_of(self, fid: int) -> int:
+        """Owner shard of a flow ID (deterministic, batch-independent)."""
+        return int(flow_shard([fid], self.num_shards)[0])
+
+    def per_flow_state_bytes(self) -> int:
+        """Bytes of one flow-table entry (identical to the single-device
+        engine's: Eq. 11/13 decode state + classifier aggregates)."""
+        denom = self.num_shards * self._n_slots
+        cache_bytes = sum(
+            leaf.nbytes // denom
+            for leaf in jax.tree_util.tree_leaves(self.caches)
+        )
+        aux = (
+            self.sig.nbytes + self.hidden_sum.nbytes
+            + self.positions.nbytes + self.vetoed.nbytes
+        ) // denom
+        return cache_bytes + aux + 8  # + host LRU timestamp
+
+    def shard_state_bytes(self) -> int:
+        """Allocated table bytes on ONE shard (what the per-shard Eq. 11
+        budget check is held against)."""
+        return hardware_model.flow_table_bytes(
+            self._n_slots, self.per_flow_state_bytes()
+        )
+
+    def resident_state_bytes(self) -> int:
+        """Aggregate allocated table bytes across all shards."""
+        return self.num_shards * self.shard_state_bytes()
+
+    @property
+    def aggregate_capacity(self) -> int:
+        return self.num_shards * self.fcfg.capacity
+
+    @property
+    def aggregate_state_budget_bytes(self) -> int:
+        return self.num_shards * self.state_budget_bytes
+
+    @property
+    def resident_flows(self) -> int:
+        return sum(t.resident for t in self.tables)
+
+    def resident_flows_per_shard(self) -> List[int]:
+        return [t.resident for t in self.tables]
+
+    def flow_ids(self) -> List[int]:
+        return [f for t in self.tables for f in t.slot_of]
+
+    # ------------------------------------------------------------------
+    # eviction (shard-local, aggregated stats)
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Clear every shard's flow table without touching the jitted step
+        (device state is lazily zeroed on slot reuse, as single-device)."""
+        for t in self.tables:
+            t.reset()
+        self._tick = 0
+        self.stats = FlowStats()
+
+    def evict(self, fid: int) -> bool:
+        return self.tables[self.shard_of(fid)].evict(fid)
+
+    def evict_idle(self) -> int:
+        if not self.fcfg.idle_timeout:
+            return 0
+        horizon = self._tick - self.fcfg.idle_timeout
+        n = 0
+        for t in self.tables:
+            for fid in t.idle_victims(horizon):
+                t.evict(fid)
+                self.stats.flows_evicted_idle += 1
+                n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
+    def ingest(self, flow_ids: np.ndarray, tokens: np.ndarray) -> Dict[str, np.ndarray]:
+        """Stream one batch of packet arrivals through the sharded table.
+
+        Same contract as :meth:`FlowEngine.ingest` — per-packet outputs
+        aligned with the input arrival order, same-flow packets serialized,
+        distinct flows vectorized — except each arrival round launches ONE
+        ``(num_shards, lanes)`` shard_map-ped step covering every shard.
+        """
+        flow_ids = np.asarray(flow_ids)
+        tokens = np.asarray(tokens, np.int32)
+        Pk, pkt_len = tokens.shape
+        assert flow_ids.shape == (Pk,), (flow_ids.shape, Pk)
+        self._tick += 1
+        self.stats.ticks += 1
+        owners = flow_shard(flow_ids, self.num_shards)
+
+        # touch resident flows in this batch BEFORE the idle sweep and any
+        # allocation (same victim-selection contract as the single-device
+        # engine: flows with packets pending here are not eviction victims
+        # unless their shard is over-subscribed within this very batch)
+        for fid, own in zip(flow_ids.tolist(), owners.tolist()):
+            self.tables[own].touch(fid, self._tick)
+        self.evict_idle()
+
+        slots = np.empty((Pk,), np.int32)
+        fresh = np.zeros((Pk,), bool)
+        for i, (fid, own) in enumerate(zip(flow_ids.tolist(), owners.tolist())):
+            slot, fr, evicted = self.tables[own].slot_for(fid, self._tick)
+            slots[i], fresh[i] = slot, fr
+            if fr:
+                self.stats.flows_created += 1
+            if evicted:
+                self.stats.flows_evicted_lru += 1
+
+        # shard-local arrival rounds, flattened to fixed-width lane chunks;
+        # chunk k of every shard rides the same device launch
+        lanes = self.fcfg.lanes
+        scratch = self.fcfg.capacity
+        per_shard_chunks: List[List[np.ndarray]] = []
+        for s in range(self.num_shards):
+            pkt_idx = np.nonzero(owners == s)[0]
+            chunks: List[np.ndarray] = []
+            for round_lanes in arrival_rounds(slots[pkt_idx].tolist()):
+                sel = pkt_idx[round_lanes]
+                for c0 in range(0, len(sel), lanes):
+                    chunks.append(sel[c0 : c0 + lanes])
+            per_shard_chunks.append(chunks)
+        n_steps = max((len(c) for c in per_shard_chunks), default=0)
+
+        out_trust = np.empty((Pk,), np.float32)
+        out_veto = np.empty((Pk,), bool)
+        out_pred = np.empty((Pk,), np.int32)
+        out_s_nn = np.empty((Pk,), np.float32)
+        out_s_sym = np.empty((Pk,), np.float32)
+
+        for k in range(n_steps):
+            idx = np.full((self.num_shards, lanes), scratch, np.int32)
+            tok = np.zeros((self.num_shards, lanes, pkt_len), np.int32)
+            fr = np.zeros((self.num_shards, lanes), bool)
+            chunk_of: List[Optional[np.ndarray]] = [None] * self.num_shards
+            for s, chunks in enumerate(per_shard_chunks):
+                if k < len(chunks):
+                    sel = chunks[k]
+                    n = len(sel)
+                    idx[s, :n] = slots[sel]
+                    tok[s, :n] = tokens[sel]
+                    fr[s, :n] = fresh[sel]
+                    chunk_of[s] = sel
+            (self.caches, self.positions, self.sig, self.hidden_sum,
+             self.vetoed, out) = self._jit_step(
+                self.params, self.rules, self.caches, self.positions,
+                self.sig, self.hidden_sum, self.vetoed,
+                jax.device_put(idx, self._row_sharded),
+                jax.device_put(tok, self._row_sharded),
+                jax.device_put(fr, self._row_sharded),
+            )
+            self.stats.rounds += 1
+            # ONE stacked gather per round across every shard (no per-shard
+            # host round trips)
+            trust = np.asarray(out["trust"], np.float32)
+            hard = np.asarray(out["hard_hit"])
+            pred = np.asarray(jnp.argmax(out["class_logits"], -1), np.int32)
+            s_nn = np.asarray(out["s_nn"], np.float32)
+            s_sym = np.asarray(out["s_sym"], np.float32)
+            for s, sel in enumerate(chunk_of):
+                if sel is None:
+                    continue
+                n = len(sel)
+                out_trust[sel] = trust[s, :n]
+                out_veto[sel] = hard[s, :n]
+                out_pred[sel] = pred[s, :n]
+                out_s_nn[sel] = s_nn[s, :n]
+                out_s_sym[sel] = s_sym[s, :n]
+        self.stats.packets += Pk
+        self.stats.tokens += Pk * pkt_len
+        return {
+            "flow_ids": flow_ids,
+            "trust": out_trust,
+            "vetoed": out_veto,
+            "pred": out_pred,
+            "s_nn": out_s_nn,
+            "s_sym": out_s_sym,
+        }
+
+    # ------------------------------------------------------------------
+    # per-flow snapshot
+    # ------------------------------------------------------------------
+    def flow_scores(self, fid: int) -> Dict[str, float]:
+        """Current scores for a resident flow (control-plane read path;
+        reads the owner shard's table rows)."""
+        s = self.shard_of(fid)
+        slot = self.tables[s].slot_of[fid]
+        pooled = self.hidden_sum[s, slot] / jnp.maximum(self.positions[s, slot], 1)
+        out, _ = C.streaming_scores(
+            self.ccfg, self.params, self.rules,
+            pooled[None], self.sig[s, slot][None], self.vetoed[s, slot][None],
+        )
+        return {
+            "trust": float(out["trust"][0]),
+            "vetoed": bool(out["hard_hit"][0]),
+            "pred": int(jnp.argmax(out["class_logits"][0])),
+            "s_nn": float(out["s_nn"][0]),
+            "s_sym": float(out["s_sym"][0]),
+            "tokens": int(self.positions[s, slot]),
+        }
+
+    # ------------------------------------------------------------------
+    # two-timescale control-plane hook
+    # ------------------------------------------------------------------
+    def swap_tables(
+        self,
+        ruleset: Optional[symbolic.RuleSet] = None,
+        weights: Optional[jax.Array] = None,
+        weight_spec=None,
+        delta=None,
+    ) -> SwapRecord:
+        """Atomically install new compiled tables on EVERY shard (§3.6).
+
+        Same request surface as :meth:`FlowEngine.swap_tables` (raw
+        RuleSet / weight table, or an audited ``ProgramDelta``), resolved
+        through the shared :func:`resolve_swap` shape check.  The install
+        replicates the new tables to all mesh devices inside one measured
+        ``atomic_swap`` — ``measure_install_time`` only returns once every
+        shard's copy is device-ready, so the recorded ``install_s`` (and
+        its Eq. 18 ``t_cp`` verdict) covers the whole sharded install, not
+        the first device.
+        """
+        from repro.core.two_timescale import atomic_swap, measure_install_time
+
+        old = self.rules
+        new, source = resolve_swap(old, ruleset, weights, weight_spec, delta)
+        installed = {}
+
+        def _install():
+            repl = jax.device_put(new, self._replicated)
+            installed["rules"] = atomic_swap(old, repl)
+            return installed["rules"]
+
+        dt = measure_install_time(_install)
+        self.rules = installed["rules"]
+        ok = (
+            hardware_model.install_time_ok(dt, self.fcfg.t_cp_s)
+            if self.fcfg.t_cp_s
+            else True
+        )
+        rec = SwapRecord(
+            tick=self._tick, install_s=dt, churn_ok=ok,
+            t_cp_s=self.fcfg.t_cp_s, source=source,
+        )
+        self.swap_history.append(rec)
+        return rec
