@@ -37,6 +37,9 @@ def main() -> None:
         "tilesweep": kernels_bench.tile_sweep,
         "serving": kernels_bench.serving_benchmarks,
         "serve_flow": lambda: serve_bench.serve_flow_benchmarks(fast=args.fast),
+        "serve_adaptive": lambda: serve_bench.serve_adaptive_benchmarks(
+            fast=args.fast
+        ),
         "serve_flow_sharded": lambda: serve_bench.serve_flow_sharded_benchmarks(
             fast=args.fast
         ),

@@ -2,11 +2,13 @@
 
 Streams :class:`FlowScenario` packet arrivals through the flow-table
 runtimes and reports packets/sec, resident flows, and eviction rate — per
-kernel backend (``serve_flow``) and per device count for the sharded engine
+kernel backend (``serve_flow``), per device count for the sharded engine
 (``serve_flow_sharded``: 1/2/4/8 shards, each measured in a subprocess so
-``XLA_FLAGS=--xla_force_host_platform_device_count`` can differ per point).
-Runs standalone (the CI smoke + regression gates) or as suites of
-``benchmarks.run``:
+``XLA_FLAGS=--xla_force_host_platform_device_count`` can differ per point),
+and with the closed adaptation loop on vs off over a non-stationary
+:class:`DriftScenario` (``serve_adaptive``: drift-stats overhead,
+installs/hour, Eq. 18 budget compliance).  Runs standalone (the CI smoke +
+regression gates) or as suites of ``benchmarks.run``:
 
     PYTHONPATH=src python -m benchmarks.serve_bench --fast
     PYTHONPATH=src python -m benchmarks.serve_bench --fast --json BENCH_serve.json
@@ -34,7 +36,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv_row, tiny_backbone
 from repro.compile import compile_program
-from repro.data.pipeline import FlowScenario
+from repro.data.pipeline import DriftPhase, DriftScenario, FlowScenario
 from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
 from repro.train import classifier as C
 
@@ -131,6 +133,90 @@ def serve_flow_benchmarks(fast: bool = False) -> List[str]:
                 f"serve/flow/{kind}/{backend}",
                 dt / max(pkts, 1) * 1e6, pkts / dt, eng,
             ))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# closed-loop adaptation under drift: cost of adaptation on vs off
+# --------------------------------------------------------------------------
+
+def _drift_phases(fast: bool):
+    b1, b2, b3 = (4, 6, 4) if fast else (6, 10, 6)
+    return (
+        DriftPhase(kind="protocol-mix", batches=b1, anomaly_rate=0.3),
+        DriftPhase(kind="rule-violating", batches=b2, anomaly_rate=0.6,
+                   sig_rotation=1),
+        DriftPhase(kind="heavy-churn", batches=b3, anomaly_rate=0.3,
+                   sig_rotation=1),
+    )
+
+
+def serve_adaptive_benchmarks(fast: bool = False) -> List[str]:
+    """Stream one DriftScenario cycle with the AdaptiveLoop on vs off:
+    pkts/sec overhead of the drift statistics + background control plane,
+    installs/hour, and the fraction of installs inside the Eq. 18 ``t_cp``
+    budget (the ``pps`` field feeds the CI regression gate)."""
+    from repro.serve.adaptive_loop import (
+        AdaptiveLoop, AdaptiveLoopConfig, DriftPolicy,
+    )
+
+    rows: List[str] = []
+    ccfg, params = _build()
+    phases = _drift_phases(fast)
+    for mode in ("off", "on"):
+        sc = DriftScenario(
+            phases=phases, pkt_len=16,
+            packets_per_batch=128 if fast else 256, seed=7,
+        )
+        program = compile_program(
+            ccfg, params,
+            rules=lambda c: C.default_rules(
+                c, jnp.asarray(sc.phase_anomaly_signature(0))
+            ),
+            backend="xla",
+        )
+        eng = FlowEngine.from_program(
+            program,
+            FlowEngineConfig(capacity=1024 if fast else 2048,
+                             lanes=128 if fast else 256),
+        )
+        loop = None
+        if mode == "on":
+            # async: the recluster/compile epoch rides a background thread,
+            # so the measured pps includes only the fast-path overhead
+            loop = AdaptiveLoop(
+                eng,
+                policy=DriftPolicy(warmup_ticks=2, cooldown_ticks=3,
+                                   sig_novelty=0.05, churn_shift=0.12),
+                cfg=AdaptiveLoopConfig(sync=False),
+            )
+        sink = loop if loop is not None else eng
+        warm = sc.next_batch()  # compile outside the timed region
+        sink.ingest(warm["flow_ids"], warm["tokens"])
+        t0 = time.perf_counter()
+        pkts = 0
+        for _ in range(sc.batches_per_cycle - 1):
+            b = sc.next_batch()
+            sink.ingest(b["flow_ids"], b["tokens"])
+            pkts += len(b["flow_ids"])
+        # stop the clock BEFORE draining the background epoch: the gated
+        # pps is the fast-path overhead, not control-plane compile latency
+        dt = time.perf_counter() - t0
+        if loop is not None:
+            loop.close()
+        extra = ""
+        if loop is not None:
+            n_inst = loop.installs
+            extra = (
+                f";triggers={len(loop.history)};installs={n_inst}"
+                f";installs_per_hour={n_inst / dt * 3600:.1f}"
+                f";within_t_cp={loop.installs_within_budget}/{max(n_inst, 1)}"
+                f";rollbacks={sum(r.rolled_back for r in loop.history)}"
+            )
+        rows.append(_emit(
+            f"serve/adaptive/{mode}/xla",
+            dt / max(pkts, 1) * 1e6, pkts / dt, eng, extra=extra,
+        ))
     return rows
 
 
@@ -294,7 +380,7 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump results as machine-readable JSON")
     ap.add_argument("--suite", default="all",
-                    choices=("flow", "sharded", "all"))
+                    choices=("flow", "sharded", "adaptive", "all"))
     ap.add_argument("--sharded-worker", type=int, default=0, metavar="N",
                     help="(internal) run the N-shard measurement in-process; "
                          "invoked by the sweep with N forced host devices")
@@ -336,6 +422,8 @@ def main() -> None:
         rows = []
         if args.suite in ("flow", "all"):
             rows += serve_flow_benchmarks(fast=args.fast)
+        if args.suite in ("adaptive", "all"):
+            rows += serve_adaptive_benchmarks(fast=args.fast)
         if args.suite in ("sharded", "all"):
             rows += serve_flow_sharded_benchmarks(fast=args.fast)
     print("name,us_per_call,derived")

@@ -1,0 +1,158 @@
+"""Closed-loop adaptation under traffic drift: the two-timescale protocol
+(Eqs. 17-18) actually driven, end to end.
+
+Three deployments of the SAME compiled DataplaneProgram stream one
+non-stationary ``DriftScenario`` — a steady protocol mix, then an
+adversarial rule-violation surge whose anomaly signature the installed TCAM
+rules have never seen (a rotated signature), then a heavy-churn phase where
+the rotated signature persists:
+
+* **static** — tables frozen at deploy time.  Its hard veto goes blind the
+  moment the signature rotates.
+* **oracle** — handed the phase-correct rules at every phase boundary (the
+  upper bound a control plane could reach with perfect foreknowledge).
+* **adaptive** — an :class:`~repro.serve.adaptive_loop.AdaptiveLoop`: the
+  on-device drift statistics notice the surge (marker-bit novelty over the
+  long-run baseline), the control plane resynthesizes the hard rules from
+  the novel bits, re-audits them through ``compile_delta``, and installs
+  them atomically between ticks — every install measured against the
+  Eq. 18 ``t_cp`` budget.
+
+The demo asserts the acceptance criterion: per phase, the adaptive loop
+recovers >= 90% of the oracle's trust-decision accuracy (the fraction of
+packets whose hard-veto verdict matches the flow's ground-truth anomaly
+label), while every installed delta passes the Eq. 18 check.  Class-head
+accuracy is unaffected by table swaps (the class logits read only the
+neural path), so trust decisions are where adaptation shows.
+
+    PYTHONPATH=src python examples/adaptive_serving.py [--async]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compile import compile_program
+from repro.configs import smoke_config
+from repro.data.pipeline import DriftPhase, DriftScenario
+from repro.serve.adaptive_loop import AdaptiveLoop, AdaptiveLoopConfig, DriftPolicy
+from repro.serve.flow_engine import FlowEngineConfig
+from repro.train import classifier as C
+
+PHASES = (
+    DriftPhase(kind="protocol-mix", batches=6, anomaly_rate=0.3),
+    DriftPhase(kind="rule-violating", batches=16, anomaly_rate=0.6,
+               sig_rotation=1),
+    DriftPhase(kind="heavy-churn", batches=10, anomaly_rate=0.3,
+               sig_rotation=1),
+)
+
+
+def build(args):
+    arch = dataclasses.replace(
+        smoke_config("chimera-dataplane"), n_layers=2, d_model=32, d_ff=64,
+        n_heads=2, n_kv_heads=2, d_head=16, vocab_size=512,
+    )
+    ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256)
+    params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
+    sc = DriftScenario(phases=PHASES, pkt_len=8,
+                       packets_per_batch=args.packets, seed=11)
+    program = compile_program(
+        ccfg, params,
+        rules=lambda c: C.default_rules(
+            c, jnp.asarray(sc.phase_anomaly_signature(0))
+        ),
+    )
+    eng = program.deploy(FlowEngineConfig(capacity=2048, lanes=128))
+    return sc, program, eng
+
+
+def replay(args, mode):
+    """Stream one full scenario cycle; per-phase trust-decision accuracy."""
+    sc, program, eng = build(args)
+    loop = None
+    if mode == "adaptive":
+        loop = AdaptiveLoop(
+            eng,
+            policy=DriftPolicy(warmup_ticks=2, cooldown_ticks=4),
+            cfg=AdaptiveLoopConfig(sync=args.sync),
+        )
+    correct, total = np.zeros(len(PHASES)), np.zeros(len(PHASES))
+    cur = 0
+    for _ in range(sc.batches_per_cycle):
+        ph = sc.phase_index()
+        if mode == "oracle" and ph != cur:
+            # perfect foreknowledge: phase-correct rules at the boundary
+            oracle = compile_program(
+                program.ccfg, program.params,
+                rules=lambda c: C.default_rules(
+                    c, jnp.asarray(sc.phase_anomaly_signature(ph))
+                ),
+            )
+            eng.swap_tables(ruleset=oracle.rules)
+            cur = ph
+        b = sc.next_batch()
+        out = (loop or eng).ingest(b["flow_ids"], b["tokens"])
+        assert (out["trust"][out["vetoed"]] == 1.0).all(), "Eq. 15 veto broken"
+        correct[ph] += (out["vetoed"] == b["anomalous"]).sum()
+        total[ph] += len(out["vetoed"])
+    if loop is not None:
+        loop.close()
+    return correct / np.maximum(total, 1), loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--packets", type=int, default=64, help="packets/batch")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="control plane on a background thread (install "
+                         "timing then depends on host load; the default "
+                         "inline mode is deterministic)")
+    args = ap.parse_args()
+    args.sync = not args.use_async
+
+    acc = {}
+    for mode in ("static", "oracle", "adaptive"):
+        acc[mode], loop = replay(args, mode)
+        print(f"{mode:9s} per-phase trust-decision accuracy: "
+              + "  ".join(f"P{i}={a:.3f}" for i, a in enumerate(acc[mode])))
+
+    print("\nadaptation history (the closed loop at work):")
+    for r in loop.history:
+        verdict = ("installed" if r.installed
+                   else ("ROLLED BACK" if r.rolled_back else f"held: {r.error}"))
+        top = max(r.trigger, key=r.trigger.get)
+        packed = [k for k in r.ledger_diff if "tcam" in k.lower()]
+        print(f"  tick {r.tick}: {','.join(r.fired_on)} "
+              f"(strongest {top}={r.trigger[top]:.3f}) -> {verdict}; "
+              f"install {r.install_s*1e3:.2f}ms vs t_cp {r.t_cp_s:g}s "
+              f"(Eq. 18 {'ok' if r.churn_ok else 'VIOLATED'})")
+        for key in packed[:2]:
+            d = r.ledger_diff[key]
+            print(f"      ledger {key}: {d['before']:g} -> {d['after']:g}")
+
+    assert loop.installs >= 1, "the surge must trigger at least one install"
+    assert loop.installs_within_budget == loop.installs, \
+        "every installed delta must pass the Eq. 18 t_cp check"
+    ratios = acc["adaptive"] / np.maximum(acc["oracle"], 1e-9)
+    print("\nadaptive/oracle recovery per phase: "
+          + "  ".join(f"P{i}={r:.3f}" for i, r in enumerate(ratios)))
+    if args.sync:
+        assert (ratios >= 0.9).all(), (
+            f"adaptation must recover >=90% of per-phase oracle accuracy, "
+            f"got {ratios}"
+        )
+        print("OK: closed-loop adaptation recovered >=90% of the per-phase "
+              "oracle accuracy with every install inside the Eq. 18 budget")
+    else:
+        # async install latency depends on host load, so the recovery bar
+        # is only asserted in the deterministic inline mode
+        print("OK (async): installs landed without blocking ingest; rerun "
+              "without --async for the deterministic >=90% recovery check")
+
+
+if __name__ == "__main__":
+    main()

@@ -132,6 +132,29 @@ class ResourceLedger:
             ledger=self,
         )
 
+    def diff(self, other: "ResourceLedger") -> Dict[str, Dict[str, float]]:
+        """Per-``stage/resource`` budget-usage delta from ``self`` (the
+        baseline, e.g. the installed program's ledger) to ``other`` (e.g. a
+        freshly compiled :class:`~repro.compile.program.ProgramDelta`'s
+        ledger).  Lines present on only one side report the other side's
+        usage as 0.0, so a delta that adds or drops a stage is visible in
+        the audit rather than silently ignored."""
+        def last_used(ledger: "ResourceLedger") -> Dict[str, float]:
+            out: Dict[str, float] = {}
+            for e in ledger.entries:
+                out[f"{e.stage}/{e.resource}"] = e.used
+            return out
+
+        a, b = last_used(self), last_used(other)
+        return {
+            key: {
+                "before": a.get(key, 0.0),
+                "after": b.get(key, 0.0),
+                "delta": b.get(key, 0.0) - a.get(key, 0.0),
+            }
+            for key in sorted(set(a) | set(b))
+        }
+
     # ------------------------------------------------------------------
     # serialization (the machine-readable audit trail)
     # ------------------------------------------------------------------

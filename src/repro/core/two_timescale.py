@@ -92,6 +92,141 @@ def delta_map(old_centroids: jax.Array, new_centroids: jax.Array) -> float:
 
 
 # --------------------------------------------------------------------------
+# Streaming drift statistics (fast-path side of the closed adaptation loop)
+# --------------------------------------------------------------------------
+#
+# The serving-time analogue of the Eq. 17 occupancy EMAs: two-rate EWMAs
+# (fast + slow) over per-class score histograms, veto/churn rates and
+# packed-signature marker-bit frequencies.  Everything here is pure jnp on
+# fixed shapes so :class:`repro.serve.adaptive_loop.AdaptiveLoop` can jit
+# one summarize/commit pair that never retraces; the drift *policy*
+# (thresholds, cooldowns) stays host-side in the serve layer.
+
+@dataclasses.dataclass(frozen=True)
+class DriftStatsConfig:
+    n_classes: int
+    n_bins: int = 8  # trust-score histogram bins over [0, 1]
+    n_bits: int = 256  # packed-signature marker bits (32 * sig_words)
+    eta_fast: float = 0.25  # memory ≈ 4 ingest batches
+    eta_slow: float = 0.02  # memory ≈ 50 ingest batches (the baseline)
+
+
+def init_drift_stats(cfg: DriftStatsConfig) -> dict:
+    """Zeroed two-rate EWMA state.  ``updates`` counts committed batches and
+    drives the Adam-style bias correction in :func:`drift_metrics` (without
+    it the cold-start fast/slow gap reads as spurious drift)."""
+    C, B, W = cfg.n_classes, cfg.n_bins, cfg.n_bits
+    return {
+        "class_fast": jnp.zeros((C,), jnp.float32),
+        "class_slow": jnp.zeros((C,), jnp.float32),
+        "hist_fast": jnp.zeros((C, B), jnp.float32),
+        "hist_slow": jnp.zeros((C, B), jnp.float32),
+        "veto_fast": jnp.zeros((), jnp.float32),
+        "veto_slow": jnp.zeros((), jnp.float32),
+        "churn_fast": jnp.zeros((), jnp.float32),
+        "churn_slow": jnp.zeros((), jnp.float32),
+        "sig_fast": jnp.zeros((W,), jnp.float32),
+        "sig_slow": jnp.zeros((W,), jnp.float32),
+        "updates": jnp.zeros((), jnp.float32),
+    }
+
+
+def summarize_drift_chunk(
+    cfg: DriftStatsConfig,
+    pred: jax.Array,  # (L,) int32 predicted class per packet
+    trust: jax.Array,  # (L,) float32 trust score in [0, 1]
+    vetoed: jax.Array,  # (L,) bool hard-veto verdicts
+    sig: jax.Array,  # (L, W) uint32 cumulative packed signatures
+    valid: jax.Array,  # (L,) bool — padding lanes carry False
+) -> dict:
+    """Masked count sums for one fixed-width lane chunk (jit-stable shapes;
+    an ingest batch of P packets is fed as ceil(P/L) chunks and the sums
+    accumulate before ONE :func:`commit_drift` EWMA update)."""
+    v = valid.astype(jnp.float32)
+    cls = jax.nn.one_hot(pred, cfg.n_classes, dtype=jnp.float32) * v[:, None]
+    bin_idx = jnp.clip(
+        (trust * cfg.n_bins).astype(jnp.int32), 0, cfg.n_bins - 1
+    )
+    bins = jax.nn.one_hot(bin_idx, cfg.n_bins, dtype=jnp.float32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((sig[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    bits = bits.reshape(sig.shape[0], -1)[:, : cfg.n_bits]
+    return {
+        "n": jnp.sum(v),
+        "class": jnp.sum(cls, axis=0),
+        "hist": cls.T @ bins,  # (C, n_bins); cls already masked
+        "veto": jnp.sum(vetoed.astype(jnp.float32) * v),
+        "sig": jnp.sum(bits * v[:, None], axis=0),
+    }
+
+
+def merge_drift_summaries(a: dict, b: dict) -> dict:
+    return {k: a[k] + b[k] for k in a}
+
+
+def commit_drift(cfg: DriftStatsConfig, stats: dict, summary: dict,
+                 churn: jax.Array) -> dict:
+    """One two-rate EWMA step per ingest batch (Eq. 17 applied to serving
+    observables).  ``churn`` is the fraction of this batch's packets that
+    allocated a new flow-table entry (host-counted, shape ())."""
+    n = jnp.maximum(summary["n"], 1.0)
+    obs = {
+        "class": summary["class"] / n,
+        "hist": summary["hist"] / n,
+        "veto": summary["veto"] / n,
+        "churn": jnp.asarray(churn, jnp.float32),
+        "sig": summary["sig"] / n,
+    }
+    new = dict(stats)
+    for name in ("class", "hist", "veto", "churn", "sig"):
+        new[f"{name}_fast"] = ema_update(stats[f"{name}_fast"], obs[name], cfg.eta_fast)
+        new[f"{name}_slow"] = ema_update(stats[f"{name}_slow"], obs[name], cfg.eta_slow)
+    new["updates"] = stats["updates"] + 1.0
+    return new
+
+
+def _debiased(stats: dict, cfg: DriftStatsConfig, name: str) -> Tuple[jax.Array, jax.Array]:
+    t = jnp.maximum(stats["updates"], 1.0)
+    cf = 1.0 - (1.0 - cfg.eta_fast) ** t
+    cs = 1.0 - (1.0 - cfg.eta_slow) ** t
+    return (
+        stats[f"{name}_fast"] / jnp.maximum(cf, 1e-9),
+        stats[f"{name}_slow"] / jnp.maximum(cs, 1e-9),
+    )
+
+
+def drift_metrics(cfg: DriftStatsConfig, stats: dict) -> dict:
+    """Scalar drift distances between the (bias-corrected) fast and slow
+    EWMAs — what the serve-layer drift policy thresholds against."""
+    class_f, class_s = _debiased(stats, cfg, "class")
+    hist_f, hist_s = _debiased(stats, cfg, "hist")
+    veto_f, veto_s = _debiased(stats, cfg, "veto")
+    churn_f, churn_s = _debiased(stats, cfg, "churn")
+    sig_f, sig_s = _debiased(stats, cfg, "sig")
+    # per-class score-histogram TV, weighted by the slow class mass so empty
+    # classes contribute nothing
+    hf = hist_f / jnp.maximum(jnp.sum(hist_f, axis=1, keepdims=True), 1e-9)
+    hs = hist_s / jnp.maximum(jnp.sum(hist_s, axis=1, keepdims=True), 1e-9)
+    w = class_s / jnp.maximum(jnp.sum(class_s), 1e-9)
+    return {
+        "class_dist": 0.5 * jnp.sum(jnp.abs(class_f - class_s)),
+        "hist_dist": jnp.sum(w * 0.5 * jnp.sum(jnp.abs(hf - hs), axis=1)),
+        "veto_shift": jnp.abs(veto_f - veto_s),
+        "churn_shift": jnp.abs(churn_f - churn_s),
+        "sig_novelty": jnp.max(jnp.maximum(sig_f - sig_s, 0.0)),
+    }
+
+
+def novel_signature_bits(cfg: DriftStatsConfig, stats: dict,
+                         threshold: float) -> jax.Array:
+    """(n_bits,) bool — marker bits whose recent frequency exceeds the
+    long-run baseline by more than ``threshold`` (the control plane's
+    rule-resynthesis input during an adversarial signature surge)."""
+    sig_f, sig_s = _debiased(stats, cfg, "sig")
+    return (sig_f - sig_s) > threshold
+
+
+# --------------------------------------------------------------------------
 # Controller
 # --------------------------------------------------------------------------
 
@@ -141,6 +276,7 @@ class TwoTimescaleController:
         *,
         program=None,
         new_weights: Optional[jax.Array] = None,
+        new_ruleset=None,
     ):
         """Run the slow path if a control-plane epoch boundary was reached.
 
@@ -152,9 +288,11 @@ class TwoTimescaleController:
         (or None when the Eq. 20 gate held the update back).  The delta
         re-runs the compiler's rule-packing/quantization passes on
         ``new_weights`` (the control plane's re-learned soft-rule column;
-        defaults to the program's installed weights), so every slow-timescale
-        table that reaches ``FlowEngine.swap_tables`` carries the same
-        budget audit as the initial deployment.
+        defaults to the program's installed weights) and/or ``new_ruleset``
+        (a re-synthesized TCAM tier, e.g. from
+        :func:`novel_signature_bits` during a signature surge), so every
+        slow-timescale table that reaches ``FlowEngine.swap_tables``
+        carries the same budget audit as the initial deployment.
         """
         if step == 0 or step % self.cfg.t_cp_steps != 0 or not self._reservoir:
             return (centroids, None) if program is None else (centroids, None, None)
@@ -182,7 +320,9 @@ class TwoTimescaleController:
         if installed:
             from repro.compile.program import compile_delta  # lazy: no core→compile cycle
 
-            delta = compile_delta(program, weights=new_weights, step=step)
+            delta = compile_delta(
+                program, weights=new_weights, ruleset=new_ruleset, step=step
+            )
         return cent_out, rec, delta
 
 

@@ -8,6 +8,17 @@ Scale-out: ``--num-shards N`` deploys a ShardedFlowEngine over N devices
 (the mesh ``data`` axis).  On CPU hosts pass ``--host-devices N`` (or set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) to expose N
 devices; ``--capacity`` is then per shard.
+
+Closed-loop adaptation: ``--adapt`` streams a non-stationary
+:class:`~repro.data.pipeline.DriftScenario` (``--drift-phases`` schedules
+it; the default ends in an adversarial signature surge) through an
+:class:`~repro.serve.adaptive_loop.AdaptiveLoop`, which recompiles and
+atomically re-installs the symbolic tables when its drift policy fires —
+on a background thread unless ``--adapt-sync``.  ``--batches`` then counts
+full scenario batches as usual.
+
+    PYTHONPATH=src python -m repro.launch.flow_serve --smoke --adapt \
+        --batches 16 [--adapt-sync] [--drift-phases protocol-mix:6,...]
 """
 
 from __future__ import annotations
@@ -38,6 +49,17 @@ def main() -> None:
                     help="serialize the compiled program via the Checkpointer")
     ap.add_argument("--ledger", action="store_true",
                     help="print the per-stage resource ledger")
+    ap.add_argument("--adapt", action="store_true",
+                    help="serve a DriftScenario under the closed-loop "
+                         "AdaptiveLoop (drift detect -> delta -> install)")
+    ap.add_argument("--adapt-sync", action="store_true",
+                    help="run the control plane inline at the triggering "
+                         "tick instead of on a background thread")
+    ap.add_argument("--drift-phases",
+                    default="protocol-mix:6,rule-violating:8:1:0.6,"
+                            "heavy-churn:6:1",
+                    help="DriftScenario schedule: comma-separated "
+                         "kind:batches[:sig_rotation[:anomaly_rate]]")
     ap.add_argument("--num-shards", type=int, default=0,
                     help="shard the flow table over N devices (mesh 'data' "
                          "axis); 0 = single-device FlowEngine")
@@ -66,7 +88,7 @@ def main() -> None:
 
     from repro.compile import compile_program
     from repro.configs import get_config, smoke_config
-    from repro.data.pipeline import FlowScenario
+    from repro.data.pipeline import DriftScenario, FlowScenario, parse_phases
     from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
     from repro.train import classifier as C
 
@@ -76,9 +98,15 @@ def main() -> None:
     ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256)
     params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
 
-    scenario = FlowScenario(kind=args.scenario, vocab_size=vocab,
-                            pkt_len=args.pkt_len,
-                            packets_per_batch=args.packets, seed=0)
+    if args.adapt:
+        scenario = DriftScenario(
+            phases=parse_phases(args.drift_phases), vocab_size=vocab,
+            pkt_len=args.pkt_len, packets_per_batch=args.packets, seed=0,
+        )
+    else:
+        scenario = FlowScenario(kind=args.scenario, vocab_size=vocab,
+                                pkt_len=args.pkt_len,
+                                packets_per_batch=args.packets, seed=0)
     # the compiler's signature-layout pass sizes sig_words so every marker
     # owns a TCAM bit; the rules callable sees the finalized layout.  The
     # full arch intentionally exceeds the 1KB/flow switch budget (Table 2
@@ -100,13 +128,23 @@ def main() -> None:
     engine = program.deploy(
         fcfg, num_shards=args.num_shards if args.num_shards else None
     )
+    loop = None
+    if args.adapt:
+        from repro.serve.adaptive_loop import AdaptiveLoop, AdaptiveLoopConfig
+
+        loop = AdaptiveLoop(
+            engine, cfg=AdaptiveLoopConfig(sync=args.adapt_sync)
+        )
 
     t0 = time.perf_counter()
     pkts = 0
+    sink = loop if loop is not None else engine
     for _ in range(args.batches):
         batch = scenario.next_batch()
-        engine.ingest(batch["flow_ids"], batch["tokens"])
+        sink.ingest(batch["flow_ids"], batch["tokens"])
         pkts += len(batch["flow_ids"])
+    if loop is not None:
+        loop.close()  # drain any in-flight control-plane epoch
     dt = time.perf_counter() - t0
     s = engine.stats
     capacity = getattr(engine, "aggregate_capacity", args.capacity)
@@ -116,8 +154,9 @@ def main() -> None:
     shards = (
         f" shards={engine.num_shards}" if args.num_shards else ""
     )
+    label = "drift" if args.adapt else args.scenario
     print(
-        f"{args.scenario}: {pkts} packets / {s.flows_created} flows in "
+        f"{label}: {pkts} packets / {s.flows_created} flows in "
         f"{dt:.2f}s = {pkts/dt:.0f} pkt/s ({pkts*args.pkt_len/dt:.0f} tok/s) | "
         f"backend={engine.backend}{shards} resident={engine.resident_flows}"
         f"/{capacity} evicted={s.flows_evicted} "
@@ -125,6 +164,26 @@ def main() -> None:
         f"state={engine.resident_state_bytes()/2**20:.1f}MiB "
         f"of {budget/2**20:.0f}MiB budget"
     )
+    if loop is not None:
+        h = loop.history
+        mode = "sync" if args.adapt_sync else "async"
+        print(
+            f"adaptation ({mode}): {len(h)} trigger(s) at ticks "
+            f"{loop.trigger_ticks}, {loop.installs} install(s), "
+            f"{loop.installs_within_budget}/{max(loop.installs, 1)} within "
+            f"the Eq. 18 t_cp budget ({loop.t_cp_s:g}s), "
+            f"{sum(r.rolled_back for r in h)} rollback(s)"
+        )
+        for r in h:
+            verdict = (
+                "installed" if r.installed
+                else ("ROLLED BACK" if r.rolled_back else f"held ({r.error})")
+            )
+            print(
+                f"  tick {r.tick}: fired {','.join(r.fired_on) or '-'} "
+                f"-> {verdict} (install {r.install_s*1e3:.2f}ms at tick "
+                f"{r.install_tick})"
+            )
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
 """Serving: batched decode engine with bounded Chimera state; flow-table
 streaming runtimes (single-device FlowEngine, multi-device
-ShardedFlowEngine partitioned over the mesh ``data`` axis)."""
+ShardedFlowEngine partitioned over the mesh ``data`` axis); and the
+closed-loop :mod:`~repro.serve.adaptive_loop` driving two-timescale
+recompile/install under traffic drift."""

@@ -1,0 +1,505 @@
+"""Closed-loop two-timescale adaptation under traffic drift (DESIGN.md §13).
+
+The paper's Eqs. 17–18 describe a fast path that only ever *reads* compiled
+tables and a slow control plane that periodically re-learns and atomically
+re-installs them.  Earlier layers built every piece — EMA statistics
+(:mod:`repro.core.two_timescale`), audited deltas
+(:func:`repro.compile.program.compile_delta`), measured atomic installs
+(``FlowEngine.swap_tables``) — but nothing *drove* them: no runtime ever
+decided **when** to recompile.  :class:`AdaptiveLoop` closes that loop:
+
+* **Drift detection (fast timescale, on-device).**  Every ingest batch
+  updates two-rate EWMAs — per-class trust-score histograms, class mix,
+  veto rate, flow churn, and packed-signature marker-bit frequencies —
+  through one jitted summarize/commit pair over fixed lane shapes, so the
+  drift path never retraces no matter how batch sizes vary.
+* **Drift policy (host).**  :class:`DriftPolicy` thresholds the
+  fast-vs-slow EWMA distances (total variation on the class mix, per-class
+  histogram TV, veto/churn shifts, signature novelty) with warmup and
+  cooldown, and decides when the control plane wakes up.
+* **Adaptation (slow timescale).**  A fired policy runs
+  ``TwoTimescaleController.maybe_recluster`` (harvested per-flow pooled
+  features → weighted k-means → Eq. 20 churn gate) →
+  ``compile_delta`` (re-audited tables; a relearn hook may resynthesize
+  the TCAM tier from :func:`repro.core.two_timescale
+  .novel_signature_bits`) → ``swap_tables(delta=)``.  In async mode the
+  recluster+compile work runs on a background thread and the finished
+  delta is installed at the next tick boundary, so fast-path ingest is
+  never blocked; sync mode runs the whole chain inline at the triggering
+  tick (deterministic — what the differential conformance tier replays).
+* **Accounting.**  Every install is measured end-to-end and held to the
+  Eq. 18 ``t_cp`` budget — a violating install is *rolled back* (the
+  previous tables are atomically re-installed), and a delta that no longer
+  fits the budget (``BudgetError`` from the compile passes) is never
+  installed at all.  Each adaptation appends an :class:`AdaptationRecord`
+  (trigger stats, recluster verdict, delta ledger diff, install timing,
+  rollback flags) to :attr:`AdaptiveLoop.history`.
+
+Works over either serving runtime — :class:`~repro.serve.flow_engine
+.FlowEngine` or the sharded :class:`~repro.serve.sharded_flow_engine
+.ShardedFlowEngine` — any engine deployed from a
+:class:`~repro.compile.program.DataplaneProgram` (deltas recompile against
+the installed program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compile.ledger import BudgetError
+from repro.core import hardware_model
+from repro.core import symbolic
+from repro.core import two_timescale as TT
+
+_METRIC_NAMES = (
+    "class_dist", "hist_dist", "veto_shift", "churn_shift", "sig_novelty",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftPolicy:
+    """When does the control plane wake up?  Each field thresholds one
+    drift metric from :func:`repro.core.two_timescale.drift_metrics`
+    (0 disables that detector).  ``warmup_ticks`` suppresses triggers until
+    the EWMAs have content; ``cooldown_ticks`` is the minimum spacing
+    between control-plane epochs (the serving-side T_cp floor)."""
+
+    class_dist: float = 0.12  # total variation on the predicted-class mix
+    hist_dist: float = 0.0  # per-class trust-histogram TV (mass-weighted)
+    veto_shift: float = 0.0  # |fast - slow| veto rate
+    churn_shift: float = 0.15  # |fast - slow| new-flow fraction
+    sig_novelty: float = 0.07  # max marker-bit frequency surge over baseline
+    warmup_ticks: int = 3
+    cooldown_ticks: int = 6
+
+    def fired(self, metrics: Dict[str, float]) -> Tuple[str, ...]:
+        """Names of the detectors whose thresholds ``metrics`` crossed."""
+        return tuple(
+            name for name in _METRIC_NAMES
+            if getattr(self, name) > 0 and metrics[name] >= getattr(self, name)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveLoopConfig:
+    eta_fast: float = 0.25  # recent-window EWMA rate (memory ~4 batches)
+    eta_slow: float = 0.02  # baseline EWMA rate (memory ~50 batches)
+    n_bins: int = 8  # trust-score histogram bins
+    stats_lanes: int = 256  # fixed drift-summary lane width (jit shape)
+    sync: bool = True  # inline control plane; False = background thread
+    observe_cap: int = 32  # resident flows sampled into the reservoir/tick
+    novelty_bit_threshold: float = 0.05  # relearn: marker-bit surge floor
+    relearn_veto_floor: float = 0.06  # relearn only while the TCAM is blind
+    t_cp_s: float = 0.0  # Eq. 18 install budget; 0 → engine's, else 60s
+
+
+@dataclasses.dataclass
+class AdaptationRecord:
+    """One control-plane epoch, end to end: why it fired, what the
+    recluster decided, what the delta cost, how the install went."""
+
+    tick: int  # engine tick the policy fired on
+    trigger: Dict[str, float]  # drift metrics at fire time
+    fired_on: Tuple[str, ...]  # which DriftPolicy detectors crossed
+    installed: bool
+    rolled_back: bool = False  # install exceeded t_cp and was undone
+    error: Optional[str] = None  # BudgetError text / hold reason
+    install_tick: int = 0  # engine tick the install landed on (async ≥ tick)
+    install_s: float = 0.0  # measured wall-clock install (Eq. 18)
+    t_cp_s: float = 0.0  # the budget the install was held to
+    churn_ok: bool = True  # Eq. 18 verdict
+    delta_step: int = 0  # control-plane epoch counter
+    recluster: Optional[Dict[str, Any]] = None  # InstallRecord fields
+    ledger_diff: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict
+    )  # program ledger vs delta ledger, per stage/resource
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["fired_on"] = list(self.fired_on)
+        return d
+
+
+def default_relearn(
+    loop: "AdaptiveLoop", trigger: Dict[str, float], fired_on: Tuple[str, ...]
+) -> Dict[str, Any]:
+    """Control-plane rule resynthesis from streaming novelty.
+
+    If the signature-novelty detector names marker bits surging above the
+    long-run baseline (an adversarial signature the installed TCAM tier has
+    never seen), rebuild every hard-rule row as an exact-match conjunction
+    over the hottest novel bits — those within 2x of the strongest surge,
+    capped at the 4-token anomaly-signature width, so a duplicate-token
+    signature (3 distinct bits) never drags a spurious weak bit into the
+    conjunction.  The rebuilt rows keep the installed RuleSet's shape, so
+    the delta's shape check passes and the jitted hot path is reused
+    verbatim.  With no novel bits the tables are left as-is (the delta
+    still re-audits and re-installs the current weights).
+
+    Resynthesis is gated on *veto coverage*: while the installed rules are
+    still firing (recent veto rate above ``relearn_veto_floor``) the TCAM
+    tier is not blind, and a trigger driven by churn or class drift must
+    not overwrite a working signature with phase-boundary transients — the
+    delta then simply re-audits and re-installs the current tables.
+
+    Deterministic given the drift statistics, which are themselves
+    deterministic functions of the replayed traffic — so conformance
+    replays re-derive identical rules on every engine.
+    """
+    stats = loop.trigger_stats  # snapshot from the firing tick, not live
+    veto_f, _ = TT._debiased(stats, loop.scfg, "veto")
+    if float(veto_f) > loop.cfg.relearn_veto_floor:
+        return {}
+    mask = np.asarray(TT.novel_signature_bits(
+        loop.scfg, stats, loop.cfg.novelty_bit_threshold
+    ))
+    if not mask.any():
+        return {}
+    sig_f, sig_s = TT._debiased(stats, loop.scfg, "sig")
+    strength = np.asarray(sig_f - sig_s)
+    novel = np.nonzero(mask)[0]
+    novel = novel[np.argsort(-strength[novel], kind="stable")]
+    novel = novel[strength[novel] >= 0.5 * strength[novel[0]]][:4]
+    rules = loop.engine.rules
+    rows = np.nonzero(np.asarray(rules.hard))[0]
+    if rows.size == 0:
+        # nothing to resynthesize: overwriting a soft row would destroy an
+        # HL-MRF rule without ever producing a veto
+        return {}
+    vals = np.asarray(rules.values).copy()
+    masks = np.asarray(rules.masks).copy()
+    word = np.zeros((vals.shape[1],), np.uint32)
+    for b in novel.tolist():
+        word[b // 32] |= np.uint32(1) << np.uint32(b % 32)
+    for r in rows.tolist():
+        vals[r] = word
+        masks[r] = word
+    return {
+        "ruleset": symbolic.RuleSet(
+            values=jnp.asarray(vals),
+            masks=jnp.asarray(masks),
+            weights=jnp.asarray(np.asarray(rules.weights)),
+            hard=jnp.asarray(np.asarray(rules.hard)),
+        )
+    }
+
+
+class AdaptiveLoop:
+    """Drive a flow-serving engine through non-stationary traffic, closing
+    the drift-detect → recompile → atomic-install loop (§3.6).
+
+    ``relearn(loop, trigger, fired_on) -> {"ruleset": ..., "new_weights":
+    ...}`` lets deployments plug in their own slow-path learner; the
+    default resynthesizes hard rules from signature novelty.
+    """
+
+    def __init__(
+        self,
+        engine,
+        policy: Optional[DriftPolicy] = None,
+        cfg: Optional[AdaptiveLoopConfig] = None,
+        controller: Optional[TT.TwoTimescaleController] = None,
+        relearn: Optional[Callable] = None,
+    ):
+        if getattr(engine, "program", None) is None:
+            raise ValueError(
+                "AdaptiveLoop needs a program-deployed engine "
+                "(FlowEngine.from_program / DataplaneProgram.deploy): slow-"
+                "timescale deltas recompile against the installed program"
+            )
+        self.engine = engine
+        self.policy = policy if policy is not None else DriftPolicy()
+        self.cfg = cfg if cfg is not None else AdaptiveLoopConfig()
+        ccfg = engine.ccfg
+        self.scfg = TT.DriftStatsConfig(
+            n_classes=ccfg.n_classes,
+            n_bins=self.cfg.n_bins,
+            n_bits=32 * ccfg.sig_words,
+            eta_fast=self.cfg.eta_fast,
+            eta_slow=self.cfg.eta_slow,
+        )
+        self.stats = TT.init_drift_stats(self.scfg)
+        # snapshot of `stats` at the most recent policy fire: each commit
+        # REPLACES the stats dict, so holding the reference is a consistent
+        # point-in-time view for the (possibly background) control plane
+        self.trigger_stats = self.stats
+        self.t_cp_s = (
+            self.cfg.t_cp_s
+            or engine.fcfg.t_cp_s
+            or TT.TwoTimescaleConfig().t_cp_seconds
+        )
+        self.controller = controller if controller is not None else (
+            # every fired policy IS a control-plane epoch (t_cp_steps=1) and
+            # the Eq. 20 churn gate defers to the drift policy (tau_map=0)
+            TT.TwoTimescaleController(
+                TT.TwoTimescaleConfig(
+                    t_cp_steps=1, tau_map=0.0, t_cp_seconds=self.t_cp_s
+                ),
+                n_centroids=ccfg.n_classes,
+            )
+        )
+        self.relearn = relearn if relearn is not None else default_relearn
+        self.history: List[AdaptationRecord] = []
+        self.metrics: Dict[str, float] = {n: 0.0 for n in _METRIC_NAMES}
+        self.centroids = jnp.zeros(
+            (ccfg.n_classes, ccfg.arch.d_model), jnp.float32
+        )
+        self._tick = 0
+        self._last_fire: Optional[int] = None
+        self._epoch = 0  # control-plane epoch counter
+        self._lock = threading.Lock()  # guards centroids/controller state
+        self._executor = (
+            None if self.cfg.sync
+            else ThreadPoolExecutor(max_workers=1, thread_name_prefix="chimera-cp")
+        )
+        self._pending: Optional[Tuple[Future, Dict[str, float], Tuple[str, ...], int]] = None
+
+        # the jitted drift path: fixed (stats_lanes,) shapes end to end, so
+        # this traces exactly twice (summarize + commit) for the loop's life
+        self._jit_summarize = jax.jit(
+            lambda pred, trust, veto, sig, valid: TT.summarize_drift_chunk(
+                self.scfg, pred, trust, veto, sig, valid
+            )
+        )
+
+        def _commit(stats, summary, churn):
+            new = TT.commit_drift(self.scfg, stats, summary, churn)
+            return new, TT.drift_metrics(self.scfg, new)
+
+        self._jit_commit = jax.jit(_commit)
+
+    # ------------------------------------------------------------------
+    # fast path
+    # ------------------------------------------------------------------
+    def ingest(self, flow_ids: np.ndarray, tokens: np.ndarray) -> Dict[str, np.ndarray]:
+        """One engine tick plus the drift bookkeeping around it.  Same
+        contract as ``FlowEngine.ingest``; a finished background delta is
+        installed *before* the batch (at the tick boundary), and a fired
+        policy schedules (async) or runs (sync) the control plane after."""
+        self._install_if_ready()
+        created0 = self.engine.stats.flows_created
+        out = self.engine.ingest(flow_ids, tokens)
+        self._tick += 1
+        P = len(out["trust"])
+        if P:
+            churn = (self.engine.stats.flows_created - created0) / P
+            self._update_stats(out, churn)
+        fired = self._policy_check()
+        if fired:
+            self._last_fire = self._tick
+            trigger = dict(self.metrics)
+            self.trigger_stats = self.stats  # freeze the firing tick's view
+            if self.cfg.sync:
+                self._run_epoch(trigger, fired, self._tick)
+            else:
+                self._epoch += 1
+                fut = self._executor.submit(self._compile_epoch, trigger, fired, self._epoch)
+                self._pending = (fut, trigger, fired, self._tick)
+        return out
+
+    def run(self, scenario, batches: int) -> List[Dict[str, np.ndarray]]:
+        """Stream ``batches`` scenario batches through the loop."""
+        outs = []
+        for _ in range(batches):
+            b = scenario.next_batch()
+            outs.append(self.ingest(b["flow_ids"], b["tokens"]))
+        return outs
+
+    # ------------------------------------------------------------------
+    # drift statistics (on-device, fixed shapes)
+    # ------------------------------------------------------------------
+    def _update_stats(self, out: Dict[str, np.ndarray], churn: float) -> None:
+        L = self.cfg.stats_lanes
+        W = self.engine.ccfg.sig_words
+        P = len(out["trust"])
+        total = None
+        for c0 in range(0, P, L):
+            n = min(L, P - c0)
+            pred = np.zeros((L,), np.int32)
+            trust = np.zeros((L,), np.float32)
+            veto = np.zeros((L,), bool)
+            sig = np.zeros((L, W), np.uint32)
+            valid = np.zeros((L,), bool)
+            pred[:n] = out["pred"][c0 : c0 + n]
+            trust[:n] = out["trust"][c0 : c0 + n]
+            veto[:n] = out["vetoed"][c0 : c0 + n]
+            sig[:n] = out["sig"][c0 : c0 + n]
+            valid[:n] = True
+            s = self._jit_summarize(
+                jnp.asarray(pred), jnp.asarray(trust), jnp.asarray(veto),
+                jnp.asarray(sig), jnp.asarray(valid),
+            )
+            total = s if total is None else TT.merge_drift_summaries(total, s)
+        self.stats, m = self._jit_commit(
+            self.stats, total, jnp.float32(churn)
+        )
+        self.metrics = {k: float(v) for k, v in m.items()}
+        self._observe_features()
+
+    def _observe_features(self) -> None:
+        feats = self._harvest_pooled(self.cfg.observe_cap)
+        if feats is not None and len(feats):
+            self.controller.observe(feats)
+
+    def _harvest_pooled(self, cap: int) -> Optional[np.ndarray]:
+        """Pooled hidden features of up to ``cap`` resident flows (the
+        control plane's recluster reservoir) — slot order, so the sample is
+        deterministic for a replayed stream."""
+        eng = self.engine
+        rows: List[np.ndarray] = []
+        have = 0
+        if hasattr(eng, "tables"):  # sharded: per-shard slot-batched state
+            for s, t in enumerate(eng.tables):
+                slots = sorted(t.fid_of)[: cap - have]
+                if not slots:
+                    continue
+                idx = jnp.asarray(slots, jnp.int32)
+                pos = jnp.maximum(eng.positions[s, idx], 1)[:, None]
+                rows.append(np.asarray(
+                    eng.hidden_sum[s, idx] / pos, np.float32
+                ))
+                have += len(slots)
+                if have >= cap:
+                    break
+        else:
+            slots = sorted(eng.table.fid_of)[:cap]
+            if slots:
+                idx = jnp.asarray(slots, jnp.int32)
+                pos = jnp.maximum(eng.positions[idx], 1)[:, None]
+                rows.append(np.asarray(eng.hidden_sum[idx] / pos, np.float32))
+        return np.concatenate(rows, axis=0) if rows else None
+
+    # ------------------------------------------------------------------
+    # drift policy
+    # ------------------------------------------------------------------
+    def _policy_check(self) -> Tuple[str, ...]:
+        if self._tick <= self.policy.warmup_ticks:
+            return ()
+        if (
+            self._last_fire is not None
+            and self._tick - self._last_fire <= self.policy.cooldown_ticks
+        ):
+            return ()
+        if self._pending is not None:
+            return ()  # one control-plane epoch in flight at a time
+        return self.policy.fired(self.metrics)
+
+    @property
+    def trigger_ticks(self) -> List[int]:
+        return [r.tick for r in self.history]
+
+    @property
+    def installs(self) -> int:
+        return sum(r.installed for r in self.history)
+
+    @property
+    def installs_within_budget(self) -> int:
+        return sum(r.installed and r.churn_ok for r in self.history)
+
+    # ------------------------------------------------------------------
+    # slow path: recluster -> audited delta -> measured atomic install
+    # ------------------------------------------------------------------
+    def _compile_epoch(self, trigger, fired, epoch):
+        """Recluster + delta compilation (thread-safe: touches controller
+        and centroids under the lock, never the engine)."""
+        with self._lock:
+            learned = self.relearn(self, trigger, fired) or {}
+            try:
+                cent, rec, delta = self.controller.maybe_recluster(
+                    step=epoch * self.controller.cfg.t_cp_steps,
+                    centroids=self.centroids,
+                    occupancy=self.trigger_stats["class_fast"],
+                    key=jax.random.PRNGKey(epoch),
+                    program=self.engine.program,
+                    new_weights=learned.get("new_weights"),
+                    new_ruleset=learned.get("ruleset"),
+                )
+            except BudgetError as e:
+                return None, None, f"BudgetError: {e}"
+            self.centroids = cent
+            if rec is None:
+                return None, None, "no-observations"
+            if delta is None:
+                return rec, None, "recluster-held"
+            return rec, delta, None
+
+    def _run_epoch(self, trigger, fired, fire_tick) -> AdaptationRecord:
+        self._epoch += 1
+        rec, delta, err = self._compile_epoch(trigger, fired, self._epoch)
+        return self._install(rec, delta, err, trigger, fired, fire_tick)
+
+    def _install_if_ready(self) -> None:
+        if self._pending is None:
+            return
+        fut, trigger, fired, fire_tick = self._pending
+        if not fut.done():
+            return
+        self._pending = None
+        rec, delta, err = fut.result()
+        self._install(rec, delta, err, trigger, fired, fire_tick)
+
+    def _install(self, rec, delta, err, trigger, fired, fire_tick) -> AdaptationRecord:
+        record = AdaptationRecord(
+            tick=fire_tick,
+            trigger=trigger,
+            fired_on=fired,
+            installed=False,
+            install_tick=self._tick,
+            t_cp_s=self.t_cp_s,
+            delta_step=self._epoch,
+            recluster=dataclasses.asdict(rec) if rec is not None else None,
+        )
+        if err is not None or delta is None:
+            record.error = err
+            self.history.append(record)
+            return record
+        prev_rules = self.engine.rules
+        swap = self.engine.swap_tables(delta=delta)
+        record.install_s = swap.install_s
+        record.churn_ok = hardware_model.install_time_ok(
+            swap.install_s, self.t_cp_s
+        )
+        record.ledger_diff = self.engine.program.ledger.diff(delta.ledger)
+        if not record.churn_ok:
+            # Eq. 18 violated: the install did not complete inside the
+            # control epoch — put the previous tables back (also measured,
+            # also atomic) rather than serving a half-trusted deployment
+            self.engine.swap_tables(ruleset=prev_rules)
+            record.rolled_back = True
+            record.error = (
+                f"install {swap.install_s:.3f}s exceeded t_cp "
+                f"{self.t_cp_s:.3f}s (Eq. 18); rolled back"
+            )
+        else:
+            record.installed = True
+        self.history.append(record)
+        return record
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def flush(self) -> None:
+        """Wait for an in-flight background epoch and install its delta
+        (call between scenario phases / before reading final history)."""
+        if self._pending is None:
+            return
+        self._pending[0].result()
+        self._install_if_ready()
+
+    def close(self) -> None:
+        self.flush()
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+
+    def __enter__(self) -> "AdaptiveLoop":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -76,8 +76,11 @@ class ServeEngine:
         LM-style slot engine: the program's backbone and kernel-backend
         selection, the same artifact the FlowEngine deploys.  ``kwargs``
         are the deployment-site knobs (batch_slots, max_len, ...)."""
-        kwargs.setdefault("backend", program.backend)
-        return cls(program.ccfg.arch, program.params["backbone"], **kwargs)
+        from repro.serve.flow_engine import _engine_kwargs_from_program
+
+        kw = _engine_kwargs_from_program(program, backend=kwargs.get("backend"))
+        kwargs["backend"] = kw["backend"]
+        return cls(kw["ccfg"].arch, kw["params"]["backbone"], **kwargs)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:

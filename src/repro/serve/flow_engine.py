@@ -126,6 +126,7 @@ def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int):
         sg = sg | C.packet_signature(ccfg, tokens)
         pooled = hs / jnp.maximum(pos, 1)[:, None].astype(jnp.float32)
         out, vt = C.streaming_scores(ccfg, params, rules, pooled, sg, vt)
+        out["sig"] = sg  # cumulative signature after this packet (drift stats)
 
         def put(c, u):
             return c.at[:, idx].set(u) if slotted(c) else c
@@ -252,6 +253,21 @@ def resolve_swap(
     return new, source
 
 
+def _engine_kwargs_from_program(program, backend: Optional[str] = None) -> Dict:
+    """The constructor inputs every ``from_program`` deploy path shares
+    (:class:`FlowEngine`, :class:`~repro.serve.sharded_flow_engine
+    .ShardedFlowEngine`, :class:`~repro.serve.engine.ServeEngine`): the
+    program's compiled classifier config, parameters and packed rules, plus
+    the kernel backend — the program's pass-selected backend unless the
+    deployment site overrides it."""
+    return {
+        "ccfg": program.ccfg,
+        "params": program.params,
+        "rules": program.rules,
+        "backend": backend if backend is not None else program.backend,
+    }
+
+
 class FlowEngine:
     """Streaming per-flow classification over a bounded flow table."""
 
@@ -317,9 +333,9 @@ class FlowEngine:
         knobs (capacity, lanes, timeouts).  An explicit ``fcfg.backend``
         overrides the program's selection.
         """
-        if fcfg.backend is None and program.backend is not None:
-            fcfg = dataclasses.replace(fcfg, backend=program.backend)
-        eng = cls(program.ccfg, program.params, program.rules, fcfg)
+        kw = _engine_kwargs_from_program(program, backend=fcfg.backend)
+        fcfg = dataclasses.replace(fcfg, backend=kw["backend"])
+        eng = cls(kw["ccfg"], kw["params"], kw["rules"], fcfg)
         eng.program = program
         # a single-device deploy supersedes any earlier sharded placement:
         # drop the stale audit entry so the ledger describes the active
@@ -444,6 +460,7 @@ class FlowEngine:
         out_pred = np.empty((P,), np.int32)
         out_s_nn = np.empty((P,), np.float32)
         out_s_sym = np.empty((P,), np.float32)
+        out_sig = np.zeros((P, self.ccfg.sig_words), np.uint32)
 
         lanes = self.fcfg.lanes
         scratch = self.fcfg.capacity
@@ -472,6 +489,7 @@ class FlowEngine:
                 )[:n]
                 out_s_nn[lanes_idx] = np.asarray(out["s_nn"], np.float32)[:n]
                 out_s_sym[lanes_idx] = np.asarray(out["s_sym"], np.float32)[:n]
+                out_sig[lanes_idx] = np.asarray(out["sig"])[:n]
         self.stats.packets += P
         self.stats.tokens += P * pkt_len
         return {
@@ -481,6 +499,7 @@ class FlowEngine:
             "pred": out_pred,
             "s_nn": out_s_nn,
             "s_sym": out_s_sym,
+            "sig": out_sig,
         }
 
     # ------------------------------------------------------------------

@@ -55,6 +55,7 @@ from repro.serve.flow_engine import (
     FlowStats,
     FlowTableDirectory,
     SwapRecord,
+    _engine_kwargs_from_program,
     make_flow_step,
     resolve_swap,
 )
@@ -197,10 +198,10 @@ class ShardedFlowEngine:
         is recorded in the program's :class:`ResourceLedger` so the deploy
         audit trail covers the sharded placement.
         """
-        if fcfg.backend is None and program.backend is not None:
-            fcfg = dataclasses.replace(fcfg, backend=program.backend)
+        kw = _engine_kwargs_from_program(program, backend=fcfg.backend)
+        fcfg = dataclasses.replace(fcfg, backend=kw["backend"])
         eng = cls(
-            program.ccfg, program.params, program.rules, fcfg,
+            kw["ccfg"], kw["params"], kw["rules"], fcfg,
             mesh=mesh, num_shards=num_shards,
         )
         eng.program = program
@@ -354,6 +355,7 @@ class ShardedFlowEngine:
         out_pred = np.empty((Pk,), np.int32)
         out_s_nn = np.empty((Pk,), np.float32)
         out_s_sym = np.empty((Pk,), np.float32)
+        out_sig = np.zeros((Pk, self.ccfg.sig_words), np.uint32)
 
         for k in range(n_steps):
             idx = np.full((self.num_shards, lanes), scratch, np.int32)
@@ -384,6 +386,7 @@ class ShardedFlowEngine:
             pred = np.asarray(jnp.argmax(out["class_logits"], -1), np.int32)
             s_nn = np.asarray(out["s_nn"], np.float32)
             s_sym = np.asarray(out["s_sym"], np.float32)
+            sig_rows = np.asarray(out["sig"])
             for s, sel in enumerate(chunk_of):
                 if sel is None:
                     continue
@@ -393,6 +396,7 @@ class ShardedFlowEngine:
                 out_pred[sel] = pred[s, :n]
                 out_s_nn[sel] = s_nn[s, :n]
                 out_s_sym[sel] = s_sym[s, :n]
+                out_sig[sel] = sig_rows[s, :n]
         self.stats.packets += Pk
         self.stats.tokens += Pk * pkt_len
         return {
@@ -402,6 +406,7 @@ class ShardedFlowEngine:
             "pred": out_pred,
             "s_nn": out_s_nn,
             "s_sym": out_s_sym,
+            "sig": out_sig,
         }
 
     # ------------------------------------------------------------------

@@ -299,6 +299,61 @@ class TestProgramSerialization:
 
 
 # ==========================================================================
+# Shared from_program deploy path (PR 3 duplication follow-up)
+# ==========================================================================
+
+class TestEngineKwargsFromProgram:
+    """FlowEngine / ShardedFlowEngine / ServeEngine ``from_program`` all
+    resolve their constructor inputs through one shared helper
+    (``serve.flow_engine._engine_kwargs_from_program``), and both engine
+    families accept every serialized DataplaneProgram the compile gate
+    emits — freshly compiled or reloaded from disk."""
+
+    @pytest.mark.parametrize("backend", (None, "xla", "reference"))
+    def test_both_engine_families_accept_gate_programs(
+        self, classifier, tmp_path, backend
+    ):
+        from repro.serve.engine import Request, ServeEngine
+
+        ccfg, params = classifier
+        program = compile_program(
+            ccfg, params, rules=_rules_fn(), backend=backend
+        )
+        program.save(str(tmp_path / "prog"))
+        loaded = DataplaneProgram.load(str(tmp_path / "prog"))
+        for prog in (program, loaded):
+            feng = FlowEngine.from_program(
+                prog, FlowEngineConfig(capacity=8, lanes=4)
+            )
+            assert feng.backend == prog.backend
+            seng = ServeEngine.from_program(prog, batch_slots=2, max_len=32)
+            assert seng.backend == prog.backend
+        # the loaded program must actually serve on both runtimes
+        feng.ingest(np.arange(3), np.full((3, 4), 300, np.int32))
+        assert feng.resident_flows == 3
+        req = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2)
+        seng.submit(req)
+        seng.run_until_done()
+        assert req.done and len(req.generated) == 2
+
+    def test_deploy_site_backend_override_wins(self, classifier):
+        from repro.serve.engine import ServeEngine
+
+        ccfg, params = classifier
+        program = compile_program(
+            ccfg, params, rules=_rules_fn(), backend="xla"
+        )
+        feng = FlowEngine.from_program(
+            program, FlowEngineConfig(capacity=8, lanes=4, backend="reference")
+        )
+        assert feng.backend == "reference"
+        seng = ServeEngine.from_program(
+            program, batch_slots=2, max_len=32, backend="reference"
+        )
+        assert seng.backend == "reference"
+
+
+# ==========================================================================
 # Two-timescale program deltas + measured installs
 # ==========================================================================
 
