@@ -42,8 +42,8 @@ from repro.train import classifier as C
 
 # backends runnable on this host; "xla" is the pure-jnp decode path, the
 # rest route the per-packet step through repro.kernels.dispatch
-_BACKENDS_FAST = ("xla", "reference")
-_BACKENDS_FULL = ("xla", "reference", "pallas-interpret") + (
+_BACKENDS_FAST = ("xla", "reference", "int-emulation")
+_BACKENDS_FULL = ("xla", "reference", "pallas-interpret", "int-emulation") + (
     ("pallas-tpu",) if jax.default_backend() == "tpu" else ()
 )
 

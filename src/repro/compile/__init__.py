@@ -8,6 +8,13 @@ Front door::
     engine = FlowEngine.from_program(program, FlowEngineConfig(capacity=2048))
 """
 
+from repro.compile.int_lowering import (
+    IntLoweringConfig,
+    IntScorePlan,
+    assert_integer_jaxpr,
+    divergence_bound,
+    lower_scores,
+)
 from repro.compile.ledger import BudgetError, ResourceLedger, StageEntry
 from repro.compile.passes import required_sig_words
 from repro.compile.program import (
@@ -20,10 +27,15 @@ from repro.compile.program import (
 __all__ = [
     "BudgetError",
     "DataplaneProgram",
+    "IntLoweringConfig",
+    "IntScorePlan",
     "ProgramDelta",
     "ResourceLedger",
     "StageEntry",
+    "assert_integer_jaxpr",
     "compile_delta",
     "compile_program",
+    "divergence_bound",
+    "lower_scores",
     "required_sig_words",
 ]

@@ -1,0 +1,542 @@
+"""Integer-only lowering of the dataplane score path (DESIGN.md §14).
+
+Every serving backend so far computes flow scores in float — the fixed-point
+machinery (:mod:`repro.core.quantization`, the Eq. 39 horizon analysis in
+:func:`repro.compile.passes.quantize_state`) only governed *storage*.  A
+real match-action pipeline has integer ALUs only (Brain-on-Switch, Quark),
+so the trust guarantees are auditable only if the arithmetic that produces
+them is integer end-to-end.  This pass lowers the score path of a compiled
+:class:`~repro.compile.program.DataplaneProgram` to fixed point:
+
+  feature map      h_q  = clip(round(h · 2^f_h))          (the Map boundary)
+  (S, Z) updates   hidden_sum_q += h_q ; count += 1       (int32 adds)
+  pooling          pooled_q = hidden_sum_q // max(count,1)
+  class head       logits_q = pooled_q · W_cls_q          (int32 MACs)
+  anomaly head     s_nn_q   = (pooled_q · W_anom_q) >> k  (rounding shift)
+  ternary match    TCAM over packed uint32 words          (already integer)
+  HL-MRF table     s_sym_q  = Σ hits · W_rule_q >> k      (SRAM gather)
+  cascade fusion   u_q = (α_q·s_nn_q + β_q·s_sym_q) >> k  (Eq. 15)
+                   S_q = hard ? 2^f_t : σ_LUT[u_q]        (sigmoid LUT)
+
+Every scale is a power of two (``FixedPointSpec(bits, 2^-f)``), so all
+requantization is a rounding arithmetic shift — the only ops left are adds,
+multiplies, shifts, compares and table gathers, i.e. switch-ALU primitives.
+Fractional widths are *derived*, not chosen: the feature LSB comes from the
+same Eq. 39 no-overflow condition that sizes the stored accumulators
+(``overflow_safe_horizon`` over the flow-length horizon), weight LSBs from
+per-tensor absmax, and every intermediate's worst-case bit width is recorded
+as a ``ResourceLedger`` entry against the 32-bit ALU budget — a program
+that needs >32-bit intermediates (or would need to crush the feature LSB
+below ``min_feature_frac`` to avoid them) raises ``BudgetError``.
+
+Trust-decision equivalence is structural, not numeric: the hard veto is the
+identical uint32 ternary match, and the sigmoid LUT is clamped to
+``2^f_t - 1`` so the lowered trust score equals exactly 1.0 *iff* a hard
+rule fired — S = 1.0 pinning survives quantization by construction.  The
+float↔int score divergence is bounded by the Thm A.3 composition computed
+in :func:`divergence_bound` and checked by ``tests/test_int_conformance``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compile.ledger import StageEntry
+from repro.core import symbolic
+from repro.core.quantization import FixedPointSpec, overflow_safe_horizon
+
+STAGE = "int-lowering"  # ledger stage name (waiver key)
+ALU_BITS = 32  # the dataplane ALU word (and our jnp emulation dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntLoweringConfig:
+    """Quantization policy knobs; everything else is derived per-program."""
+
+    feature_bits: int = 16  # logical width of one quantized feature h_q
+    min_feature_frac: int = 6  # refuse to lower below this feature LSB
+    feature_range: float = 8.0  # assumed |h| bound after final norm (B_h)
+    weight_bits: int = 12  # logical width of head/rule weight entries
+    weight_frac_cap: int = 20  # absmax-derived weight LSBs never exceed this
+    score_frac: int = 10  # target LSB of s_nn / s_sym / u (2^-f_s)
+    fusion_bits: int = 16  # alpha/beta fixed-point width
+    fusion_frac: int = 12  # alpha/beta LSB (2^-f_ab)
+    trust_frac: int = 14  # trust LSB: S = 1.0 is exactly 2^f_t
+    lut_bits: int = 10  # sigmoid LUT entries = 2^lut_bits
+    lut_range: float = 8.0  # LUT covers u in [-R, R]; power of two
+    max_divergence: float = 0.05  # budget for the Thm A.3 trust bound
+
+
+@dataclasses.dataclass(frozen=True)
+class IntScorePlan:
+    """The static shape of one lowered score program: every fractional
+    width, shift count and LUT constant.  A pure function of (ccfg, params,
+    rules, cfg, horizon) — deploy sites re-derive it instead of serializing
+    it, so ``DataplaneProgram.save``/``load`` round-trips bit-exactly with
+    no new manifest fields."""
+
+    feature_bits: int
+    feature_frac: int  # f_h: h_q = round(h * 2^f_h)
+    feature_range: float  # B_h the derivation assumed
+    weight_bits: int
+    cls_frac: int  # f_wc
+    anom_frac: int  # f_wa
+    rule_frac: int  # f_wr
+    score_frac: int  # f_s: LSB of s_nn_q, s_sym_q, u_q
+    nn_shift: int  # (f_h + f_wa) - f_s >= 0
+    sym_shift: int  # f_wr - f_s >= 0
+    fusion_frac: int  # f_ab: alpha_q/beta_q LSB
+    trust_frac: int  # f_t
+    one_q: int  # 2^f_t — the pinned S = 1.0 in quantized units
+    n_lut: int
+    lut_shift: int  # u-to-index shift (may be negative: finer-than-LSB)
+    lut_range: float
+    u_min_q: int  # -R * 2^f_s
+    horizon: int  # Eq. 39 flow-length the feature LSB covers
+    has_cls_bias: bool
+    has_anom_bias: bool
+    divergence: float  # Thm A.3 composed float<->int trust bound
+
+
+# IntScoreTables is a plain dict pytree of int32 arrays:
+#   cls_w (d, C), anom_w (d, 1), [cls_b (C,), anom_b (1,)],
+#   rule_w (M,), alpha (), beta (), lut (n_lut,)
+
+
+def _pow2_frac(absmax: float, bits: int, cap: int) -> int:
+    """Largest f with absmax * 2^f <= 2^(bits-1)-1 (power-of-two absmax
+    scaling), capped; an all-zero tensor gets the cap."""
+    max_int = 2 ** (bits - 1) - 1
+    if absmax <= 0.0:
+        return cap
+    return min(int(math.floor(math.log2(max_int / absmax))), cap)
+
+
+def _q(x, frac: int, bits: int) -> jax.Array:
+    """Round-to-nearest fixed-point image at scale 2^-frac, stored int32."""
+    max_int = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(jnp.asarray(x, jnp.float32) * (2.0 ** frac)),
+                 -max_int - 1, max_int)
+    return q.astype(jnp.int32)
+
+
+def _signed_bits(bound: float) -> int:
+    """Bits needed to hold a signed value with |x| <= bound."""
+    return int(math.ceil(math.log2(max(bound, 1.0)))) + 1
+
+
+def _rshift_round(x: jax.Array, k: int) -> jax.Array:
+    """Requantize by 2^-k with round-half-up — the switch-ALU idiom
+    ``(x + (1 << (k-1))) >> k``.  ``k`` is static; k = 0 is the identity."""
+    if k == 0:
+        return x
+    return jnp.right_shift(x + jnp.int32(1 << (k - 1)), k)
+
+
+# --------------------------------------------------------------------------
+# the lowering pass
+# --------------------------------------------------------------------------
+
+def lower_scores(
+    ccfg,
+    params,
+    rules: symbolic.RuleSet,
+    *,
+    cfg: IntLoweringConfig = IntLoweringConfig(),
+    horizon: int = 1024,
+) -> Tuple[IntScorePlan, Dict[str, jax.Array], List[StageEntry]]:
+    """Lower the streaming score path to fixed point.
+
+    Returns ``(plan, tables, entries)``; the caller assembles the entries
+    into a :class:`ResourceLedger` and ``raise_if_over()`` turns any >32-bit
+    intermediate into a :class:`BudgetError` naming this stage.
+    """
+    if cfg.lut_range <= 0 or 2 ** round(math.log2(cfg.lut_range)) != cfg.lut_range:
+        raise ValueError(f"lut_range must be a power of two, got {cfg.lut_range}")
+    arch = ccfg.arch
+    d = arch.d_model
+    b_h = cfg.feature_range
+    max_int_f = 2 ** (cfg.feature_bits - 1) - 1
+
+    # ---- feature LSB: the Eq. 39 derivation -------------------------------
+    # (a) fit: B_h real units must fit the feature word;
+    # (b) Eq. 39: `horizon` quantized features must accumulate in the 32-bit
+    #     (S, Z) analog (hidden_sum_q, count) without overflow — the same
+    #     overflow_safe_horizon condition that sizes the stored accumulators;
+    # (c) ALU: the head MACs over the pooled feature must fit 32 bits.
+    f_fit = int(math.floor(math.log2(max_int_f / b_h)))
+    f_eq39 = f_fit
+    while f_eq39 > 0 and overflow_safe_horizon(
+        b_h, 1.0, FixedPointSpec(bits=ALU_BITS, scale=2.0 ** -f_eq39)
+    ) < horizon:
+        f_eq39 -= 1
+    max_int_w = 2 ** (cfg.weight_bits - 1) - 1
+    alu_max = 2 ** (ALU_BITS - 1) - 1
+    f_mac = int(math.floor(math.log2(alu_max / (d * b_h * max_int_w))))
+    f_h = min(f_fit, f_eq39, f_mac)
+
+    # ---- weight tables ----------------------------------------------------
+    def absmax(x) -> float:
+        return float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32))))
+
+    cap = cfg.weight_frac_cap
+    cls_w, anom_w = params["cls"]["w"], params["anom"]["w"]
+    f_wc = _pow2_frac(absmax(cls_w), cfg.weight_bits, cap)
+    f_wa = _pow2_frac(absmax(anom_w), cfg.weight_bits, cap)
+    f_wr = _pow2_frac(absmax(rules.weights), cfg.weight_bits, cap)
+    f_s = min(cfg.score_frac, f_h + f_wa, f_wr)
+    f_ab = cfg.fusion_frac
+    f_t = cfg.trust_frac
+    one_q = 1 << f_t
+
+    tables: Dict[str, jax.Array] = {
+        "cls_w": _q(cls_w, f_wc, cfg.weight_bits),
+        "anom_w": _q(anom_w, f_wa, cfg.weight_bits),
+        "rule_w": _q(rules.weights, f_wr, cfg.weight_bits),
+        "alpha": _q(params["fusion"]["alpha"], f_ab, cfg.fusion_bits),
+        "beta": _q(params["fusion"]["beta"], f_ab, cfg.fusion_bits),
+    }
+    has_cls_bias = "b" in params["cls"]
+    has_anom_bias = "b" in params["anom"]
+    if has_cls_bias:  # biases live at the accumulator LSB (f_h + f_wc)
+        tables["cls_b"] = _q(params["cls"]["b"], f_h + f_wc, ALU_BITS)
+    if has_anom_bias:
+        tables["anom_b"] = _q(params["anom"]["b"], f_h + f_wa, ALU_BITS)
+
+    # ---- sigmoid LUT (Eq. 15 soft branch) ---------------------------------
+    # u_q at LSB 2^-f_s indexes 2^lut_bits buckets over [-R, R]; values are
+    # clamped to one_q - 1 so S_q == one_q <=> hard veto, structurally.
+    n_lut = 1 << cfg.lut_bits
+    lut_shift = f_s + 1 + int(round(math.log2(cfg.lut_range))) - cfg.lut_bits
+    u_min_q = -int(cfg.lut_range * (1 << f_s))
+    centers = (-cfg.lut_range
+               + (np.arange(n_lut) + 0.5) * (2.0 * cfg.lut_range / n_lut))
+    soft = np.clip(np.round(1.0 / (1.0 + np.exp(-centers)) * one_q), 0, one_q - 1)
+    tables["lut"] = jnp.asarray(soft, jnp.int32)
+
+    # ---- worst-case bit-width accounting (the ledger audit) ---------------
+    M = rules.n_rules
+    pooled_bound = min(max_int_f, b_h * 2.0 ** f_h)  # |pooled_q| per scalar
+    acc_bound = horizon * (b_h * 2.0 ** f_h + 0.5)  # Eq. 39 numerator
+    cls_bound = d * pooled_bound * float(jnp.max(jnp.abs(tables["cls_w"])))
+    if has_cls_bias:
+        cls_bound += float(jnp.max(jnp.abs(tables["cls_b"])))
+    nn_shift = f_h + f_wa - f_s
+    anom_bound = d * pooled_bound * float(jnp.max(jnp.abs(tables["anom_w"])))
+    if has_anom_bias:
+        anom_bound += float(jnp.max(jnp.abs(tables["anom_b"])))
+    anom_acc_bound = anom_bound + (2.0 ** (nn_shift - 1) if nn_shift else 0.0)
+    sym_shift = f_wr - f_s
+    sym_bound = M * float(jnp.max(jnp.abs(tables["rule_w"])))
+    sym_acc_bound = sym_bound + (2.0 ** (sym_shift - 1) if sym_shift else 0.0)
+    nn_q_bound = anom_bound / max(2.0 ** nn_shift, 1.0)
+    sym_q_bound = sym_bound / max(2.0 ** sym_shift, 1.0)
+    a_q = float(jnp.abs(tables["alpha"]))
+    b_q = float(jnp.abs(tables["beta"]))
+    fusion_bound = a_q * nn_q_bound + b_q * sym_q_bound + 2.0 ** (f_ab - 1)
+
+    eta = divergence_bound(
+        cfg, f_h=f_h, f_wa=f_wa, f_wr=f_wr, f_s=f_s, d=d, n_rules=M,
+        sum_abs_anom_w=float(jnp.sum(jnp.abs(anom_w))),
+        nn_bound=anom_bound / 2.0 ** (f_h + f_wa),
+        sym_bound=sym_bound / 2.0 ** f_wr,
+    )
+
+    spec_h = FixedPointSpec(bits=ALU_BITS, scale=2.0 ** -f_h)
+    entries = [
+        StageEntry(
+            # over budget iff the derived feature LSB had to be crushed
+            # below the precision floor to keep every intermediate <= 32-bit
+            stage=STAGE, resource="feature-frac-bits",
+            used=cfg.min_feature_frac, budget=f_h,
+            detail=f"f_h={f_h} = min(fit {f_fit}, Eq.39 {f_eq39}, "
+                   f"ALU {f_mac}) at B_h={b_h:g}; floor {cfg.min_feature_frac}",
+        ),
+        StageEntry(
+            stage=STAGE, resource="feature-acc-bits",
+            used=_signed_bits(acc_bound), budget=ALU_BITS,
+            detail=f"Eq. 39: horizon={horizon} tokens of {cfg.feature_bits}-bit "
+                   f"features at scale 2^-{f_h} into the int32 (S, Z) analog",
+        ),
+        StageEntry(
+            stage=STAGE, resource="overflow-horizon",
+            used=horizon,
+            budget=overflow_safe_horizon(b_h, 1.0, spec_h),
+            detail=f"Eq. 39 safe horizon at scale 2^-{f_h}, B_phi={b_h:g}, R_v=1",
+        ),
+        StageEntry(
+            stage=STAGE, resource="class-matmul-bits",
+            used=_signed_bits(cls_bound), budget=ALU_BITS,
+            detail=f"d={d} MACs of {cfg.feature_bits}x{cfg.weight_bits}-bit "
+                   f"(fracs {f_h}+{f_wc})",
+        ),
+        StageEntry(
+            stage=STAGE, resource="anom-matmul-bits",
+            used=_signed_bits(anom_acc_bound), budget=ALU_BITS,
+            detail=f"d={d} MACs + round-half constant, >>{nn_shift} to f_s={f_s}",
+        ),
+        StageEntry(
+            stage=STAGE, resource="sym-acc-bits",
+            used=_signed_bits(sym_acc_bound), budget=ALU_BITS,
+            detail=f"{M} rule-table gathers at frac {f_wr}, >>{sym_shift}",
+        ),
+        StageEntry(
+            stage=STAGE, resource="fusion-preact-bits",
+            used=_signed_bits(fusion_bound), budget=ALU_BITS,
+            detail=f"alpha_q*s_nn_q + beta_q*s_sym_q at frac {f_s}+{f_ab}, "
+                   f"LUT over [-{cfg.lut_range:g}, {cfg.lut_range:g}]",
+        ),
+        StageEntry(
+            stage=STAGE, resource="trust-divergence",
+            used=eta, budget=cfg.max_divergence,
+            detail=f"Thm A.3 composed float<->int bound (f_h={f_h}, f_s={f_s}, "
+                   f"LUT {n_lut} buckets, trust LSB 2^-{f_t})",
+        ),
+    ]
+
+    plan = IntScorePlan(
+        feature_bits=cfg.feature_bits, feature_frac=f_h, feature_range=b_h,
+        weight_bits=cfg.weight_bits, cls_frac=f_wc, anom_frac=f_wa,
+        rule_frac=f_wr, score_frac=f_s, nn_shift=nn_shift, sym_shift=sym_shift,
+        fusion_frac=f_ab, trust_frac=f_t, one_q=one_q, n_lut=n_lut,
+        lut_shift=lut_shift, lut_range=cfg.lut_range, u_min_q=u_min_q,
+        horizon=horizon, has_cls_bias=has_cls_bias, has_anom_bias=has_anom_bias,
+        divergence=eta,
+    )
+    return plan, tables, entries
+
+
+def divergence_bound(
+    cfg: IntLoweringConfig,
+    *,
+    f_h: int,
+    f_wa: int,
+    f_wr: int,
+    f_s: int,
+    d: int,
+    n_rules: int,
+    sum_abs_anom_w: float,
+    nn_bound: float,
+    sym_bound: float,
+) -> float:
+    """Thm A.3 composition: worst-case |trust_float - trust_int| on the
+    soft branch (the hard branch is exactly 1.0 on both sides).
+
+    Error sources, composed through the 1/4-Lipschitz sigmoid:
+    pooled-feature rounding (0.5 LSB/token averages to 0.5, + 1 LSB from
+    the integer floor-div pooling), weight rounding against the worst-case
+    pooled magnitude, the three requantization half-LSB shifts, alpha/beta
+    rounding against the score bounds, LUT bucket width, trust-LSB
+    rounding, and the sigmoid tail beyond the LUT range.
+    """
+    s_h, s_wa, s_wr = 2.0 ** -f_h, 2.0 ** -f_wa, 2.0 ** -f_wr
+    s_s, s_ab, s_t = 2.0 ** -f_s, 2.0 ** -cfg.fusion_frac, 2.0 ** -cfg.trust_frac
+    e_pool = 1.5 * s_h  # per-scalar: token rounding + floor-div pooling
+    e_nn = (e_pool * sum_abs_anom_w
+            + 0.5 * s_wa * d * cfg.feature_range
+            + 0.5 * s_s)
+    e_sym = 0.5 * s_wr * n_rules + 0.5 * s_s
+    # alpha/beta ~ 1 at fusion_frac; their rounding scales the score bounds
+    e_u = ((1.0 + 0.5 * s_ab) * (e_nn + e_sym)
+           + 0.5 * s_ab * (nn_bound + sym_bound)
+           + 0.5 * s_s)
+    bucket = 2.0 * cfg.lut_range / (1 << cfg.lut_bits)
+    tail = 1.0 / (1.0 + math.exp(cfg.lut_range))
+    return 0.25 * e_u + 0.25 * bucket + 0.5 * s_t + tail
+
+
+# --------------------------------------------------------------------------
+# the lowered program (int32 jnp ops only — audited by score_jaxpr scan)
+# --------------------------------------------------------------------------
+
+def quantize_features(plan: IntScorePlan, h: jax.Array) -> jax.Array:
+    """The Map-stage boundary: float hidden state -> fixed-point feature.
+    The ONE float->int crossing; everything downstream of it is integer."""
+    max_int = 2 ** (plan.feature_bits - 1) - 1
+    q = jnp.clip(jnp.round(h * (2.0 ** plan.feature_frac)),
+                 -max_int - 1, max_int)
+    return q.astype(jnp.int32)
+
+
+def int_flow_score(
+    plan: IntScorePlan,
+    tables: Dict[str, jax.Array],
+    rules: symbolic.RuleSet,
+    hidden_sum: jax.Array,  # (B, d) int32 — Σ h_q (the streaming S analog)
+    count: jax.Array,  # (B,) int32 token counts (the Z analog)
+    sig: jax.Array,  # (B, W) uint32 cumulative signature
+    sticky_hard: jax.Array,  # (B,) bool
+):
+    """The integer score path (the `int-emulation` flow_score backend).
+
+    Mirrors :func:`repro.train.classifier.streaming_scores` over the lowered
+    tables with int32 arithmetic only: no float op appears in this
+    function's jaxpr (asserted by :func:`assert_integer_jaxpr`).  Returns
+    ``(outputs, new_sticky)`` with quantized scores — dequantization (for
+    the engine's float output contract) happens in the caller, outside the
+    audited region.
+    """
+    pooled = hidden_sum // jnp.maximum(count, 1)[:, None]  # floor-div SumReduce
+    logits_q = jnp.dot(pooled, tables["cls_w"],
+                       preferred_element_type=jnp.int32)
+    if plan.has_cls_bias:
+        logits_q = logits_q + tables["cls_b"]
+    nn_acc = jnp.dot(pooled, tables["anom_w"],
+                     preferred_element_type=jnp.int32)[:, 0]
+    if plan.has_anom_bias:
+        nn_acc = nn_acc + tables["anom_b"][0]
+    s_nn_q = _rshift_round(nn_acc, plan.nn_shift)
+
+    hits = symbolic.ternary_match(sig, rules)  # bit-exact TCAM (uint32)
+    hard = symbolic.hard_hit(hits, rules) | sticky_hard
+    sym_acc = jnp.sum(jnp.where(hits, tables["rule_w"], jnp.int32(0)), axis=-1)
+    s_sym_q = _rshift_round(sym_acc, plan.sym_shift)
+
+    u_acc = tables["alpha"] * s_nn_q + tables["beta"] * s_sym_q
+    u_q = _rshift_round(u_acc, plan.fusion_frac)
+    off = u_q - jnp.int32(plan.u_min_q)
+    if plan.lut_shift >= 0:
+        idx = jnp.right_shift(off, plan.lut_shift)
+    else:
+        idx = jnp.left_shift(off, -plan.lut_shift)
+    idx = jnp.clip(idx, 0, plan.n_lut - 1)
+    soft_q = tables["lut"][idx]
+    trust_q = jnp.where(hard, jnp.int32(plan.one_q), soft_q)  # Eq. 15 pin
+    return {
+        "class_logits": logits_q,  # int32; argmax is quantization-monotone
+        "s_nn_q": s_nn_q,
+        "s_sym_q": s_sym_q,
+        "trust_q": trust_q,
+        "hard_hit": hard,
+    }, hard
+
+
+def reference_flow_score(
+    plan: IntScorePlan,
+    tables: Dict[str, jax.Array],
+    rules: symbolic.RuleSet,
+    hidden_sum: jax.Array,
+    count: jax.Array,
+    sig: jax.Array,
+    sticky_hard: jax.Array,
+):
+    """Float oracle of the lowered program (the `reference` flow_score
+    backend): dequantize the compiled tables and the int accumulator, then
+    run the exact float score path.  The differential-conformance upper arm."""
+    pooled = (hidden_sum.astype(jnp.float32) * 2.0 ** -plan.feature_frac
+              / jnp.maximum(count, 1)[:, None].astype(jnp.float32))
+    cls_w = tables["cls_w"].astype(jnp.float32) * 2.0 ** -plan.cls_frac
+    anom_w = tables["anom_w"].astype(jnp.float32) * 2.0 ** -plan.anom_frac
+    logits = pooled @ cls_w
+    if plan.has_cls_bias:
+        logits = logits + (tables["cls_b"].astype(jnp.float32)
+                           * 2.0 ** -(plan.feature_frac + plan.cls_frac))
+    s_nn = (pooled @ anom_w)[:, 0]
+    if plan.has_anom_bias:
+        s_nn = s_nn + (tables["anom_b"].astype(jnp.float32)
+                       * 2.0 ** -(plan.feature_frac + plan.anom_frac))[0]
+    hits = symbolic.ternary_match(sig, rules)
+    hard = symbolic.hard_hit(hits, rules) | sticky_hard
+    rule_w = tables["rule_w"].astype(jnp.float32) * 2.0 ** -plan.rule_frac
+    s_sym = jnp.sum(hits.astype(jnp.float32) * rule_w, axis=-1)
+    alpha = tables["alpha"].astype(jnp.float32) * 2.0 ** -plan.fusion_frac
+    beta = tables["beta"].astype(jnp.float32) * 2.0 ** -plan.fusion_frac
+    soft = jax.nn.sigmoid(alpha * s_nn + beta * s_sym)
+    trust = jnp.where(hard, jnp.ones_like(soft), soft)
+    return {
+        "class_logits": logits,
+        "s_nn": s_nn,
+        "s_sym": s_sym,
+        "trust": trust,
+        "hard_hit": hard,
+    }, hard
+
+
+def dequantize_scores(plan: IntScorePlan, out: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Widen the quantized outputs to the engine's float contract (outside
+    the audited integer region).  2^-f scales are exact in fp32, so
+    ``trust == 1.0`` iff ``trust_q == one_q`` iff the hard veto fired."""
+    s = dict(out)
+    s["trust"] = out["trust_q"].astype(jnp.float32) * 2.0 ** -plan.trust_frac
+    s["s_nn"] = out["s_nn_q"].astype(jnp.float32) * 2.0 ** -plan.score_frac
+    s["s_sym"] = out["s_sym_q"].astype(jnp.float32) * 2.0 ** -plan.score_frac
+    return s
+
+
+def requantize_rule_weights(plan: IntScorePlan, weights: jax.Array) -> jax.Array:
+    """Re-lower a swapped-in HL-MRF weight column at the installed plan's
+    LSB — shape- and dtype-stable, so ``swap_tables`` never retraces."""
+    return _q(weights, plan.rule_frac, plan.weight_bits)
+
+
+# --------------------------------------------------------------------------
+# jaxpr dtype audit: no float op may appear in the int score path
+# --------------------------------------------------------------------------
+
+def score_jaxpr(plan: IntScorePlan, tables, rules: symbolic.RuleSet,
+                batch: int, d_model: int):
+    """Trace :func:`int_flow_score` at the given shapes (abstract — nothing
+    is executed) and return its ClosedJaxpr for auditing."""
+    W = rules.values.shape[1]
+    args = (
+        tables,
+        rules,
+        jax.ShapeDtypeStruct((batch, d_model), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch, W), jnp.uint32),
+        jax.ShapeDtypeStruct((batch,), jnp.bool_),
+    )
+    return jax.make_jaxpr(
+        lambda t, r, hs, c, sg, st: int_flow_score(plan, t, r, hs, c, sg, st)
+    )(*args)
+
+
+def _walk_jaxpr(jaxpr, visit):
+    from jax.extend import core as jex_core
+
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "dtype"):
+                visit(eqn.primitive.name, aval)
+        for p in eqn.params.values():
+            subs = p if isinstance(p, (tuple, list)) else (p,)
+            for s in subs:
+                if isinstance(s, jex_core.ClosedJaxpr):
+                    _walk_jaxpr(s.jaxpr, visit)
+                elif isinstance(s, jex_core.Jaxpr):
+                    _walk_jaxpr(s, visit)
+
+
+def float_ops_in_jaxpr(closed_jaxpr) -> List[str]:
+    """Names of primitives touching any inexact (float/complex) operand or
+    result anywhere in the (recursively walked) jaxpr."""
+    found: List[str] = []
+
+    def visit(prim: str, aval) -> None:
+        if jnp.issubdtype(aval.dtype, jnp.inexact):
+            found.append(f"{prim}[{aval.dtype}]")
+
+    _walk_jaxpr(closed_jaxpr.jaxpr, visit)
+    for v in closed_jaxpr.jaxpr.constvars:
+        aval = getattr(v, "aval", None)
+        if aval is not None and jnp.issubdtype(aval.dtype, jnp.inexact):
+            found.append(f"constvar[{aval.dtype}]")
+    return found
+
+
+def assert_integer_jaxpr(plan: IntScorePlan, tables, rules: symbolic.RuleSet,
+                         batch: int = 4, d_model: Optional[int] = None) -> None:
+    """Raise if the lowered score program contains ANY float op."""
+    d = d_model if d_model is not None else int(tables["cls_w"].shape[0])
+    bad = float_ops_in_jaxpr(score_jaxpr(plan, tables, rules, batch, d))
+    if bad:
+        raise AssertionError(
+            f"int-emulation score path contains float ops: {sorted(set(bad))}"
+        )

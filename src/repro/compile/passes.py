@@ -244,7 +244,9 @@ def select_backend(
         "T": ch.chunk_size,
     }
     tiles: Optional[Dict[str, int]] = None
-    if effective not in (None, "xla"):
+    # int-emulation keeps the backbone on the plain-jnp path (only the score
+    # stage is lowered), so there is no Pallas decode kernel to tile
+    if effective not in (None, "xla", "int-emulation"):
         tiles = autotune.get_tiles(
             "decode_step", dims, backend=resolve_backend(effective)
         )

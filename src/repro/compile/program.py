@@ -202,6 +202,7 @@ def compile_program(
     flows: int = 8192,
     waivers: Tuple[str, ...] = (),
     tpu=DEFAULT_TPU,
+    int_cfg=None,
 ) -> DataplaneProgram:
     """Lower (config, params, rules) into a deployable DataplaneProgram.
 
@@ -239,6 +240,23 @@ def compile_program(
     # pass 4 — kernel backend + tiles
     effective_backend, tiles, entries = passes.select_backend(ccfg, backend, tpu)
     ledger.extend(entries)
+
+    # pass 4b — integer score lowering (int-emulation targets only): derive
+    # the per-stage fixed-point formats from the Eq. 39 analysis and audit
+    # every intermediate bit-width at compile time, so a program that cannot
+    # run in int32 fails HERE, not at deploy.  The plan/tables themselves are
+    # re-derived deterministically by the engine (pure function of the
+    # program contents), so nothing extra is serialized.
+    eff = backend if backend is not None else effective_backend
+    if eff == "int-emulation":
+        from repro.compile.int_lowering import IntLoweringConfig, lower_scores
+
+        _, _, entries = lower_scores(
+            ccfg, params, rules,
+            cfg=int_cfg if int_cfg is not None else IntLoweringConfig(),
+            horizon=horizon,
+        )
+        ledger.extend(entries)
 
     # pass 5 — aggregate shared-resource report (Table 2)
     report, entries = passes.assemble_ledger(

@@ -108,6 +108,6 @@ def quantize_per_channel(x: jax.Array, bits: int, axis: int = -1) -> QuantizedTe
     max_int = 2 ** (bits - 1) - 1
     absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
     scale = jnp.maximum(absmax, 1e-12) / max_int
-    dtype = {8: jnp.int8, 16: jnp.int16}[bits]
+    dtype = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
     q = jnp.clip(jnp.round(x / scale), -max_int - 1, max_int).astype(dtype)
     return QuantizedTensor(values=q, scale=scale.astype(jnp.float32))

@@ -55,7 +55,12 @@ jax.tree_util.register_pytree_node(
 
 
 def _int_dtype(bits: int):
-    return {8: jnp.int8, 16: jnp.int16}[bits]
+    try:
+        return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
+    except KeyError:
+        raise ValueError(
+            f"unsupported state width {bits}; expected 8, 16 or 32"
+        ) from None
 
 
 def _quant(x: jax.Array, bits: int, axes: Tuple[int, ...]):

@@ -9,12 +9,22 @@ checks the seed repo scattered across the ``ops.py`` wrappers:
   chimera_attention    chunked local + φ-stream partials (train/prefill)
   window_attention     causal sliding-window flash attention (SWA)
   decode_step          fused per-token streaming decode (serve hot path)
+  flow_score           streaming trust/class scoring over the per-flow
+                       (Σh, count, signature) aggregates (FlowEngine)
 
   backend              implementation
   ------------------   ----------------------------------------------------
   pallas-tpu           pl.pallas_call compiled to Mosaic (TPU hosts)
   pallas-interpret     the same kernel under the Pallas interpreter (CPU)
   reference            the pure-jnp oracle from the family's ref.py
+  int-emulation        the integer-lowered score path (compile/int_lowering
+                       — int32 jnp ops only; flow_score family)
+
+Not every family implements every backend: the backbone kernel families are
+float-only (pallas-tpu / pallas-interpret / reference), while ``flow_score``
+ships the integer lowering plus its float reference oracle.  The invariant
+every family MUST satisfy is a registered ``reference`` implementation —
+the conformance tiers differentiate every other backend against it.
 
 ``resolve_backend("auto")`` is the single place in the codebase that
 inspects ``jax.default_backend()``.  Everything above this module — models,
@@ -40,7 +50,9 @@ from repro.kernels.decode_step.ref import decode_step_ref
 from repro.kernels.window_attention.kernel import window_attention_pallas
 from repro.kernels.window_attention.ref import window_attention_ref
 
-BACKENDS: Tuple[str, ...] = ("pallas-tpu", "pallas-interpret", "reference")
+BACKENDS: Tuple[str, ...] = (
+    "pallas-tpu", "pallas-interpret", "reference", "int-emulation"
+)
 
 _REGISTRY: Dict[Tuple[str, str], Callable] = {}
 
@@ -107,7 +119,11 @@ def apply_kernel_backend(cfg, backend):
 
     if backend is None:
         return cfg, (cfg.chimera.backend if cfg.chimera.use_pallas else "xla")
-    if backend == "xla":
+    if backend in ("xla", "int-emulation"):
+        # int-emulation lowers the *score* path (the flow_score family); the
+        # backbone feature extractor stays on the plain-jnp float path, kept
+        # bit-identical to an "xla" deployment so differential conformance
+        # isolates the integer region
         cfg = dataclasses.replace(
             cfg,
             swa_backend="xla",
@@ -232,4 +248,33 @@ def _decode_reference(q, k_t, v_t, phi_q, phi_buf, k_buf, v_buf, S, Z, count, *,
     return decode_step_ref(
         q, k_t, v_t, phi_q, phi_buf, k_buf, v_buf, S, Z, count,
         chunk_size, gamma=gamma,
+    )
+
+
+# ==========================================================================
+# flow_score — canonical signature:
+#   (plan: IntScorePlan, tables: {name: int32 array}, rules: RuleSet,
+#    hidden_sum (B,d), count (B,) int32, sig (B,W) uint32, sticky (B,) bool)
+#   -> (outputs dict, new_sticky (B,) bool)
+# ``int-emulation`` runs the lowered int32 program (hidden_sum is the
+# quantized feature accumulator; outputs carry *_q fixed-point scores);
+# ``reference`` is the float oracle over the SAME compiled tables
+# (dequantize-then-score), the upper arm of the conformance differential.
+# Imports are lazy: compile/int_lowering imports core modules that import
+# this registry.
+# ==========================================================================
+
+@register("flow_score", "int-emulation")
+def _flow_score_int(plan, tables, rules, hidden_sum, count, sig, sticky):
+    from repro.compile.int_lowering import int_flow_score
+
+    return int_flow_score(plan, tables, rules, hidden_sum, count, sig, sticky)
+
+
+@register("flow_score", "reference")
+def _flow_score_reference(plan, tables, rules, hidden_sum, count, sig, sticky):
+    from repro.compile.int_lowering import reference_flow_score
+
+    return reference_flow_score(
+        plan, tables, rules, hidden_sum, count, sig, sticky
     )

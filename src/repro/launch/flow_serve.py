@@ -44,7 +44,8 @@ def main() -> None:
     ap.add_argument("--lanes", type=int, default=256)
     ap.add_argument("--idle-timeout", type=int, default=0)
     ap.add_argument("--backend", default=None,
-                    help="xla | auto | pallas-tpu | pallas-interpret | reference")
+                    help="xla | auto | pallas-tpu | pallas-interpret | "
+                         "reference | int-emulation")
     ap.add_argument("--save-program", default=None, metavar="DIR",
                     help="serialize the compiled program via the Checkpointer")
     ap.add_argument("--ledger", action="store_true",

@@ -52,6 +52,7 @@ class FlowEngineConfig:
     max_flow_tokens: int = 1024  # KV length for non-Chimera archs only
     t_cp_s: float = 0.0  # control-plane epoch for Eq. 18 checks (0 = off)
     backend: Optional[str] = None  # kernel backend ("xla" | dispatch name)
+    horizon: int = 1024  # Eq. 39 flow-length horizon (int-emulation lowering)
 
 
 @dataclasses.dataclass
@@ -83,7 +84,7 @@ class SwapRecord:
     source: str = "manual"  # "manual" | "delta" (audited ProgramDelta)
 
 
-def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int):
+def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int, int_plan=None):
     """Build the jitted flow-table update step over ``n_slots`` table rows.
 
     One arrival round of lanes: gather the touched rows (lazily zeroing
@@ -95,14 +96,29 @@ def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int):
     .ShardedFlowEngine` run the *same* traced function — one shard of a
     sharded table is exactly a single-device table, which is what makes
     sharded replay bit-identical to single-device replay.
+
+    With an :class:`~repro.compile.int_lowering.IntScorePlan`, the score
+    path runs the integer-lowered program instead (the ``int-emulation``
+    backend): features are quantized at the Map boundary, ``hidden_sum`` is
+    the int32 fixed-point accumulator, and the ``rules`` argument carries
+    ``(rules, int_tables)`` so table swaps reuse the traced step.  The
+    backbone scan is unchanged (float, bit-identical to the xla path).
     """
     arch = ccfg.arch
+    if int_plan is not None:
+        from repro.compile.int_lowering import dequantize_scores, quantize_features
+        from repro.kernels.dispatch import resolve
+
+        int_score = resolve("flow_score", "int-emulation")
 
     def slotted(c) -> bool:
         return c.ndim >= 2 and c.shape[1] == n_slots
 
     def step(params, rules, caches, positions, sig, hidden_sum, vetoed,
              idx, tokens, fresh):
+        if int_plan is not None:
+            rules, int_tables = rules
+
         # gather the touched rows; zero lanes holding newly-alloc'd flows
         # (slot reuse after eviction must look like a fresh table entry)
         def take(c):
@@ -114,18 +130,27 @@ def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int):
         cs = jax.tree_util.tree_map(take, caches)
         pos = jnp.where(fresh, 0, positions[idx])
         sg = jnp.where(fresh[:, None], jnp.uint32(0), sig[idx])
-        hs = jnp.where(fresh[:, None], 0.0, hidden_sum[idx])
+        hs_rows = hidden_sum[idx]
+        hs = jnp.where(fresh[:, None], jnp.zeros_like(hs_rows), hs_rows)
         vt = jnp.where(fresh, False, vetoed[idx])
 
         def body(carry, tok_t):
             cs, pos, hs = carry
             h, cs = M.decode_hidden_step(arch, params["backbone"], tok_t, pos, cs)
-            return (cs, pos + 1, hs + h.astype(jnp.float32)), None
+            if int_plan is not None:  # the one float->int crossing (Map stage)
+                h = quantize_features(int_plan, h)
+            else:
+                h = h.astype(jnp.float32)
+            return (cs, pos + 1, hs + h), None
 
         (cs, pos, hs), _ = jax.lax.scan(body, (cs, pos, hs), tokens.T)
         sg = sg | C.packet_signature(ccfg, tokens)
-        pooled = hs / jnp.maximum(pos, 1)[:, None].astype(jnp.float32)
-        out, vt = C.streaming_scores(ccfg, params, rules, pooled, sg, vt)
+        if int_plan is not None:
+            out, vt = int_score(int_plan, int_tables, rules, hs, pos, sg, vt)
+            out = dequantize_scores(int_plan, out)  # engine float contract
+        else:
+            pooled = hs / jnp.maximum(pos, 1)[:, None].astype(jnp.float32)
+            out, vt = C.streaming_scores(ccfg, params, rules, pooled, sg, vt)
         out["sig"] = sg  # cumulative signature after this packet (drift stats)
 
         def put(c, u):
@@ -289,6 +314,25 @@ class FlowEngine:
         self.swap_history: List[SwapRecord] = []
         self.program = None  # set by from_program
 
+        # int-emulation: lower the score path to fixed point.  The plan is a
+        # pure function of (ccfg, params, rules, horizon), so program
+        # save/load and swap installs need no extra serialized state.  A
+        # >32-bit lowering raises BudgetError here — int32 emulation of a
+        # wider program would silently wrap, so it is never deployable.
+        self._int_plan = None
+        self._int_tables = None
+        self._int_entries: List = []
+        if self.backend == "int-emulation":
+            from repro.compile.int_lowering import lower_scores
+            from repro.compile.ledger import ResourceLedger
+
+            self._int_plan, self._int_tables, self._int_entries = lower_scores(
+                self.ccfg, params, rules, horizon=fcfg.horizon
+            )
+            deploy_ledger = ResourceLedger()
+            deploy_ledger.extend(self._int_entries)
+            deploy_ledger.raise_if_over()
+
         # slot-batched state: capacity real slots + one scratch slot that
         # absorbs padding lanes (index == capacity)
         self._n_slots = fcfg.capacity + 1
@@ -298,7 +342,8 @@ class FlowEngine:
         W, d = ccfg.sig_words, arch.d_model
         self.positions = jnp.zeros((self._n_slots,), jnp.int32)
         self.sig = jnp.zeros((self._n_slots, W), jnp.uint32)
-        self.hidden_sum = jnp.zeros((self._n_slots, d), jnp.float32)
+        hs_dtype = jnp.int32 if self._int_plan is not None else jnp.float32
+        self.hidden_sum = jnp.zeros((self._n_slots, d), hs_dtype)
         self.vetoed = jnp.zeros((self._n_slots,), bool)
 
         # host-side table bookkeeping
@@ -334,15 +379,19 @@ class FlowEngine:
         overrides the program's selection.
         """
         kw = _engine_kwargs_from_program(program, backend=fcfg.backend)
-        fcfg = dataclasses.replace(fcfg, backend=kw["backend"])
+        fcfg = dataclasses.replace(
+            fcfg, backend=kw["backend"], horizon=program.horizon
+        )
         eng = cls(kw["ccfg"], kw["params"], kw["rules"], fcfg)
         eng.program = program
-        # a single-device deploy supersedes any earlier sharded placement:
-        # drop the stale audit entry so the ledger describes the active
-        # deployment (the sharded path records its own on each deploy)
+        # a single-device deploy supersedes any earlier sharded placement or
+        # int lowering: drop the stale audit entries so the ledger describes
+        # the active deployment, then record this deploy's own lowering
         program.ledger.entries = [
-            e for e in program.ledger.entries if e.stage != "flow-table-sharding"
+            e for e in program.ledger.entries
+            if e.stage not in ("flow-table-sharding", "int-lowering")
         ]
+        program.ledger.entries.extend(eng._int_entries)
         return eng
 
     # ------------------------------------------------------------------
@@ -382,7 +431,14 @@ class FlowEngine:
     # jitted hot path
     # ------------------------------------------------------------------
     def _make_step(self):
-        return make_flow_step(self.ccfg, self._n_slots)
+        return make_flow_step(self.ccfg, self._n_slots, int_plan=self._int_plan)
+
+    def _step_rules(self):
+        """The ``rules`` argument of the jitted step: the packed RuleSet,
+        paired with the lowered int tables under int-emulation."""
+        if self._int_plan is not None:
+            return (self.rules, self._int_tables)
+        return self.rules
 
     # ------------------------------------------------------------------
     # flow-table bookkeeping (host side)
@@ -476,7 +532,7 @@ class FlowEngine:
                 fr[:n] = fresh[chunk]
                 (self.caches, self.positions, self.sig, self.hidden_sum,
                  self.vetoed, out) = self._jit_step(
-                    self.params, self.rules, self.caches, self.positions,
+                    self.params, self._step_rules(), self.caches, self.positions,
                     self.sig, self.hidden_sum, self.vetoed,
                     jnp.asarray(idx), jnp.asarray(tok), jnp.asarray(fr),
                 )
@@ -508,11 +564,22 @@ class FlowEngine:
     def flow_scores(self, fid: int) -> Dict[str, float]:
         """Current scores for a resident flow (control-plane read path)."""
         slot = self.table.slot_of[fid]
-        pooled = self.hidden_sum[slot] / jnp.maximum(self.positions[slot], 1)
-        out, _ = C.streaming_scores(
-            self.ccfg, self.params, self.rules,
-            pooled[None], self.sig[slot][None], self.vetoed[slot][None],
-        )
+        if self._int_plan is not None:
+            from repro.compile.int_lowering import dequantize_scores
+            from repro.kernels.dispatch import resolve
+
+            out, _ = resolve("flow_score", "int-emulation")(
+                self._int_plan, self._int_tables, self.rules,
+                self.hidden_sum[slot][None], self.positions[slot][None],
+                self.sig[slot][None], self.vetoed[slot][None],
+            )
+            out = dequantize_scores(self._int_plan, out)
+        else:
+            pooled = self.hidden_sum[slot] / jnp.maximum(self.positions[slot], 1)
+            out, _ = C.streaming_scores(
+                self.ccfg, self.params, self.rules,
+                pooled[None], self.sig[slot][None], self.vetoed[slot][None],
+            )
         return {
             "trust": float(out["trust"][0]),
             "vetoed": bool(out["hard_hit"][0]),
@@ -556,10 +623,24 @@ class FlowEngine:
 
         def _install():
             installed["rules"] = atomic_swap(old, new)
+            if self._int_plan is not None:
+                # re-lower the soft-rule weight column so the int score path
+                # reads the NEW table; counted inside the measured install —
+                # the Eq. 18 budget covers everything the swap deploys
+                from repro.compile.int_lowering import requantize_rule_weights
+
+                installed["tables"] = {
+                    **self._int_tables,
+                    "rule_w": requantize_rule_weights(
+                        self._int_plan, installed["rules"].weights
+                    ),
+                }
             return installed["rules"]
 
         dt = measure_install_time(_install)
         self.rules = installed["rules"]
+        if "tables" in installed:
+            self._int_tables = installed["tables"]
         ok = (
             hardware_model.install_time_ok(dt, self.fcfg.t_cp_s)
             if self.fcfg.t_cp_s

@@ -105,6 +105,12 @@ class ShardedFlowEngine:
         self.num_shards = S
 
         arch, self.backend = apply_kernel_backend(ccfg.arch, fcfg.backend)
+        if self.backend == "int-emulation":
+            raise NotImplementedError(
+                "int-emulation is single-device only for now: the lowered "
+                "int tables are not yet placed per shard (deploy with "
+                "FlowEngine.from_program instead)"
+            )
         self.ccfg = dataclasses.replace(ccfg, arch=arch)
         self.fcfg = fcfg
         self.stats = FlowStats()

@@ -45,30 +45,66 @@ def _decode_args(BH=4, Gq=2, L=8, d=16, m=32, dv=16):
 
 
 class TestRegistry:
-    def test_every_family_registers_every_backend(self):
+    # the float backbone families implement every float backend; flow_score
+    # is the int lowering plus its float oracle
+    BACKBONE_FAMILIES = ("chimera_attention", "decode_step", "window_attention")
+
+    def test_family_backend_matrix(self):
         assert dispatch.families() == (
-            "chimera_attention", "decode_step", "window_attention"
+            "chimera_attention", "decode_step", "flow_score",
+            "window_attention",
         )
+        for family in self.BACKBONE_FAMILIES:
+            assert dispatch.backends(family) == (
+                "pallas-tpu", "pallas-interpret", "reference"
+            )
+        assert dispatch.backends("flow_score") == ("reference", "int-emulation")
         for family in dispatch.families():
-            assert dispatch.backends(family) == dispatch.BACKENDS
-            for backend in dispatch.BACKENDS:
+            for backend in dispatch.backends(family):
                 assert callable(dispatch.resolve(family, backend))
+
+    def test_backends_listing_is_canonical_subset(self):
+        """backends() returns registered backends in BACKENDS order, for
+        every family — no family invents its own ordering."""
+        for family in dispatch.families():
+            got = dispatch.backends(family)
+            assert set(got) <= set(dispatch.BACKENDS)
+            assert got == tuple(b for b in dispatch.BACKENDS if b in got)
+
+    def test_every_family_ships_a_reference_oracle(self):
+        """The registry invariant the conformance tiers depend on: every
+        family has a ``reference`` implementation to differentiate against."""
+        for family in dispatch.families():
+            assert "reference" in dispatch.backends(family), family
+            assert callable(dispatch.resolve(family, "reference"))
 
     def test_auto_resolves_per_host(self):
         expect = "pallas-tpu" if jax.default_backend() == "tpu" else "pallas-interpret"
         assert dispatch.resolve_backend("auto") == expect
         assert dispatch.resolve_backend("reference") == "reference"
+        assert dispatch.resolve_backend("int-emulation") == "int-emulation"
 
     def test_unknown_family_and_backend_raise(self):
-        with pytest.raises(KeyError):
+        with pytest.raises(KeyError, match="nonexistent_kernel"):
             dispatch.backends("nonexistent_kernel")
-        with pytest.raises(ValueError):
+        with pytest.raises(ValueError, match="cuda"):
             dispatch.resolve_backend("cuda")
-        with pytest.raises(ValueError):
+        with pytest.raises(ValueError, match="cuda"):
             dispatch.resolve("chimera_attention", "cuda")
+        with pytest.raises(KeyError, match="no_such_family"):
+            dispatch.resolve("no_such_family", "reference")
+
+    def test_unregistered_pair_names_family_and_registered_backends(self):
+        """A family that exists but lacks the requested backend gets a
+        KeyError naming what IS registered (not a bare miss)."""
+        with pytest.raises(KeyError, match="flow_score") as ei:
+            dispatch.resolve("flow_score", "pallas-tpu")
+        assert "reference" in str(ei.value)
+        with pytest.raises(KeyError, match="int-emulation"):
+            dispatch.resolve("chimera_attention", "int-emulation")
 
     def test_register_rejects_unknown_backend(self):
-        with pytest.raises(ValueError):
+        with pytest.raises(ValueError, match="tensorcore"):
             dispatch.register("chimera_attention", "tensorcore")
 
 

@@ -1,0 +1,168 @@
+"""Property tests for the fixed-point core (§3.3.1, Thm A.3, Eq. 39).
+
+Each invariant ships a deterministic parametrized witness (always runs)
+plus a hypothesis wrapper (runs where CI installs hypothesis), matching
+the DriftScenario property-test pattern:
+
+* quantize→dequantize round-trip error ≤ η_q = scale/2 inside the
+  representable range (with fp32-mantissa slack, which only bites at 32
+  bits where the int grid out-resolves fp32);
+* out-of-range inputs saturate exactly at ``max_int``/``min_int``;
+* stochastic rounding is mean-unbiased;
+* ``overflow_safe_horizon`` is monotone in ``bits`` and ``scale``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import (
+    FixedPointSpec,
+    check_overflow,
+    dequantize,
+    overflow_safe_horizon,
+    quantize,
+    quantize_per_channel,
+)
+
+WIDTHS = (8, 16, 32)
+
+
+def _spec(bits, scale):
+    return FixedPointSpec(bits=bits, scale=scale)
+
+
+# --------------------------------------------------------------------------
+# shared property checkers
+# --------------------------------------------------------------------------
+
+def check_roundtrip(bits, scale, seed):
+    spec = _spec(bits, scale)
+    x = (jax.random.uniform(jax.random.PRNGKey(seed), (256,),
+                            minval=-1.0, maxval=1.0)
+         * spec.max_int * spec.scale)
+    back = dequantize(quantize(x, spec), spec)
+    err = jnp.abs(back - x)
+    slack = jnp.abs(x) * 2.0 ** -22  # fp32 round-off of x/scale and q*scale
+    assert bool(jnp.all(err <= spec.eta_q + slack + 1e-12)), (
+        bits, scale, float(jnp.max(err)),
+    )
+
+
+def check_saturation(bits, scale):
+    spec = _spec(bits, scale)
+    hi = jnp.asarray([spec.max_int * scale * 4.0, jnp.inf])
+    lo = jnp.asarray([spec.min_int * scale * 4.0, -jnp.inf])
+    assert (np.asarray(quantize(hi, spec)) == spec.max_int).all()
+    assert (np.asarray(quantize(lo, spec)) == spec.min_int).all()
+    qt = quantize_per_channel(jnp.asarray([[1e30, -1e30]]), bits)
+    assert int(np.max(np.asarray(qt.values))) <= spec.max_int
+    assert int(np.min(np.asarray(qt.values))) >= spec.min_int
+
+
+def check_stochastic_unbiased(bits, scale, value_lsb, seed, n=1 << 15):
+    """E[dequantize(stochastic quantize(x))] == x: the rounding noise is
+    zero-mean, so the empirical mean over n draws lands within a few
+    standard errors (one draw's error is < 1 LSB)."""
+    spec = _spec(bits, scale)
+    val = value_lsb * spec.scale  # a non-grid point strictly inside range
+    x = jnp.full((n,), val, jnp.float32)
+    q = quantize(x, spec, stochastic_key=jax.random.PRNGKey(seed))
+    mean = float(jnp.mean(dequantize(q, spec).astype(jnp.float64)))
+    tol = 6.0 * spec.scale / np.sqrt(n) + abs(val) * 2.0 ** -20
+    assert abs(mean - val) <= tol, (bits, scale, mean, val, tol)
+
+
+def check_horizon_monotone(B_phi, R_v, bits, scale):
+    """Eq. 39: more accumulator bits or a coarser LSB never shrink the
+    overflow-safe flow length (and the horizon it returns is itself safe)."""
+    h = overflow_safe_horizon(B_phi, R_v, _spec(bits, scale))
+    assert h >= 0
+    assert check_overflow(h, B_phi, R_v, _spec(bits, scale))
+    if bits + 8 <= 32:
+        assert overflow_safe_horizon(B_phi, R_v, _spec(bits + 8, scale)) >= h
+    assert overflow_safe_horizon(B_phi, R_v, _spec(bits, scale * 2.0)) >= h
+    # and strictly finite pressure the other way: halving the scale (finer
+    # LSB) can only shorten or keep the horizon
+    assert overflow_safe_horizon(B_phi, R_v, _spec(bits, scale * 0.5)) <= h
+
+
+# --------------------------------------------------------------------------
+# deterministic witnesses (always run)
+# --------------------------------------------------------------------------
+
+class TestFixedPointInvariants:
+    @pytest.mark.parametrize("bits", WIDTHS)
+    @pytest.mark.parametrize("scale", (2.0 ** -11, 2.0 ** -4, 1.0, 3.5))
+    def test_roundtrip_eta_q(self, bits, scale):
+        check_roundtrip(bits, scale, seed=7)
+
+    @pytest.mark.parametrize("bits", WIDTHS)
+    @pytest.mark.parametrize("scale", (2.0 ** -8, 1.0))
+    def test_clip_saturation(self, bits, scale):
+        check_saturation(bits, scale)
+
+    @pytest.mark.parametrize("bits", WIDTHS)
+    def test_stochastic_rounding_unbiased(self, bits):
+        check_stochastic_unbiased(bits, 2.0 ** -6, value_lsb=10.3, seed=0)
+
+    def test_stochastic_differs_from_nearest(self):
+        """Stochastic rounding actually dithers: a mid-grid value maps to
+        both neighbouring codes across elements."""
+        spec = _spec(16, 1.0)
+        q = quantize(jnp.full((4096,), 2.5), spec,
+                     stochastic_key=jax.random.PRNGKey(1))
+        assert set(np.unique(np.asarray(q))) == {2, 3}
+
+    @pytest.mark.parametrize("bits", WIDTHS)
+    @pytest.mark.parametrize("scale", (2.0 ** -10, 2.0 ** -2, 1.0))
+    @pytest.mark.parametrize("B_phi,R_v", ((1.0, 1.0), (8.0, 2.0)))
+    def test_horizon_monotone(self, bits, scale, B_phi, R_v):
+        check_horizon_monotone(B_phi, R_v, bits, scale)
+
+    def test_eta_q_is_half_lsb(self):
+        for bits in WIDTHS:
+            for scale in (2.0 ** -9, 1.0, 4.0):
+                assert _spec(bits, scale).eta_q == 0.5 * scale
+
+
+# --------------------------------------------------------------------------
+# hypothesis wrappers (CI installs hypothesis)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    pow2_scales = st.integers(-14, 4).map(lambda f: 2.0 ** f)
+
+    class TestFixedPointProperties:
+        @settings(max_examples=40, deadline=None)
+        @given(bits=st.sampled_from(WIDTHS), scale=pow2_scales,
+               seed=st.integers(0, 2**16))
+        def test_roundtrip_eta_q(self, bits, scale, seed):
+            check_roundtrip(bits, scale, seed)
+
+        @settings(max_examples=20, deadline=None)
+        @given(bits=st.sampled_from(WIDTHS), scale=pow2_scales)
+        def test_clip_saturation(self, bits, scale):
+            check_saturation(bits, scale)
+
+        @settings(max_examples=15, deadline=None)
+        @given(bits=st.sampled_from(WIDTHS),
+               value_lsb=st.floats(-100.0, 100.0),
+               seed=st.integers(0, 2**16))
+        def test_stochastic_rounding_unbiased(self, bits, value_lsb, seed):
+            check_stochastic_unbiased(bits, 2.0 ** -6, value_lsb, seed)
+
+        @settings(max_examples=40, deadline=None)
+        @given(bits=st.sampled_from(WIDTHS), scale=pow2_scales,
+               B_phi=st.floats(1e-3, 64.0), R_v=st.floats(1e-3, 64.0))
+        def test_horizon_monotone(self, bits, scale, B_phi, R_v):
+            check_horizon_monotone(B_phi, R_v, bits, scale)

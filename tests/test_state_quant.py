@@ -1,14 +1,19 @@
-"""Asymmetric fixed-point decode state (§4.12): round-trip bounds, end-to-end
-decode drift, and the HBM saving it buys."""
+"""Asymmetric fixed-point decode state (§4.12): round-trip bounds (η_q,
+property-tested over all three widths), end-to-end decode drift, and the
+HBM saving it buys."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import chimera_attention as ca
 from repro.core.feature_maps import FeatureMapConfig
 from repro.core.state_quant import (
     StateQuantConfig,
+    _int_dtype,
     dequantize_state,
     quant_decode_step,
     quantize_state,
@@ -78,3 +83,69 @@ def test_memory_saving():
     qs = quantize_state(state)
     saving = state_bytes(state) / state_bytes(qs)
     assert saving > 1.8  # ≥ ~2x: S fp32→int16, Z fp32→int8, bufs fp32→bf16
+
+
+# ==========================================================================
+# η_q round-trip property over all three widths — deterministic versions +
+# hypothesis wrappers (mirrored so the invariant runs where hypothesis is
+# absent, matching the DriftScenario property-test pattern)
+# ==========================================================================
+
+def check_roundtrip_eta_q(s_bits, z_bits, seed, magnitude):
+    """quantize→dequantize error per element ≤ η_q = scale/2 (Thm A.3),
+    plus an fp32-mantissa slack term that only matters at 32 bits (the
+    int32 grid is finer than fp32 resolution near absmax)."""
+    assert _int_dtype(s_bits) == {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[s_bits]
+    base = ca.init_decode_state(CFG, 2, 2, 16, 16)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    state = dataclasses.replace(
+        base,
+        S=jax.random.normal(ks[0], base.S.shape, jnp.float32) * magnitude,
+        Z=jnp.abs(jax.random.normal(ks[1], base.Z.shape, jnp.float32)) * magnitude,
+    )
+    qs = quantize_state(state, StateQuantConfig(s_bits=s_bits, z_bits=z_bits))
+    assert qs.S_q.dtype == _int_dtype(s_bits)
+    assert qs.Z_q.dtype == _int_dtype(z_bits)
+    back = dequantize_state(qs)
+    for x, b, scale in (
+        (state.S, back.S, qs.S_scale),
+        (state.Z, back.Z, qs.Z_scale),
+    ):
+        eta_q = 0.5 * scale  # per-group half-LSB bound
+        slack = jnp.abs(x) * 2.0 ** -22  # fp32 round-off in x/scale*scale
+        err = jnp.abs(b - x)
+        assert bool(jnp.all(err <= eta_q + slack + 1e-12)), (
+            s_bits, z_bits, float(jnp.max(err - eta_q - slack)),
+        )
+
+
+class TestRoundTripEtaQ:
+    @pytest.mark.parametrize("s_bits", (8, 16, 32))
+    @pytest.mark.parametrize("z_bits", (8, 16, 32))
+    def test_eta_q_bound_all_widths(self, s_bits, z_bits):
+        check_roundtrip_eta_q(s_bits, z_bits, seed=3, magnitude=4.0)
+
+    def test_unsupported_width_rejected(self):
+        with pytest.raises(ValueError, match="8, 16 or 32"):
+            _int_dtype(12)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    class TestRoundTripEtaQProperties:
+        @settings(max_examples=25, deadline=None)
+        @given(
+            s_bits=st.sampled_from((8, 16, 32)),
+            z_bits=st.sampled_from((8, 16, 32)),
+            seed=st.integers(0, 2**16),
+            magnitude=st.floats(1e-3, 1e3),
+        )
+        def test_eta_q_bound(self, s_bits, z_bits, seed, magnitude):
+            check_roundtrip_eta_q(s_bits, z_bits, seed, magnitude)
