@@ -19,6 +19,12 @@ regression gates) or as suites of ``benchmarks.run``:
 CSV: name,us_per_call,derived — us_per_call is wall-µs per packet.  The
 ``--gate`` mode compares the ``pps`` field of two ``--json`` dumps and
 fails on a >30% packets/sec regression on any benchmark present in both.
+
+Each ``serve/flow/{kind}/{backend}`` row is paired with a ``…+fused`` row
+(the DESIGN.md §15 single-launch ingest through the AsyncIngestPipeline
+ring) and a derived-only ``…+fused-vs-legacy`` speedup row; the latter
+carries no ``pps`` field, so the gate compares the fused path against its
+own baseline, never against the per-round path.
 """
 
 from __future__ import annotations
@@ -89,13 +95,18 @@ def _emit(name: str, us_per_pkt: float, pps: float, eng, extra: str = "") -> str
 
 
 def serve_flow_benchmarks(fast: bool = False) -> List[str]:
+    from repro.serve.ingest_pipeline import AsyncIngestPipeline
+
     rows: List[str] = []
     backends = _BACKENDS_FAST if fast else _BACKENDS_FULL
     scenarios = _SCENARIOS_FAST if fast else _SCENARIOS_FULL
     batches = 3 if fast else 6
     ccfg, params = _build()
+    fcfg_kw = dict(capacity=512 if fast else 2048,
+                   lanes=128 if fast else 256)
     for backend in backends:
         eng = None  # one engine (one jitted step) per backend; reset per kind
+        fused_eng = pipe = None
         for kind in scenarios:
             sc = FlowScenario(
                 kind=kind, pkt_len=16,
@@ -112,26 +123,59 @@ def serve_flow_benchmarks(fast: bool = False) -> List[str]:
                     backend=backend,
                 )
                 eng = FlowEngine.from_program(
-                    program,
-                    FlowEngineConfig(
-                        capacity=512 if fast else 2048,
-                        lanes=128 if fast else 256,
-                    ),
+                    program, FlowEngineConfig(**fcfg_kw)
                 )
+                # the fused engine shares the program; warm_fused pre-traces
+                # the width buckets so the timed region is launch + compute
+                fused_eng = FlowEngine.from_program(
+                    program, FlowEngineConfig(fused=True, **fcfg_kw)
+                )
+                fused_eng.warm_fused(pkt_len=16)
+                pipe = AsyncIngestPipeline(fused_eng)
             else:
                 eng.reset()
-            warm = sc.next_batch()  # compile outside the timed region
-            eng.ingest(warm["flow_ids"], warm["tokens"])
-            t0 = time.perf_counter()
-            pkts = 0
-            for _ in range(batches):
-                b = sc.next_batch()
-                eng.ingest(b["flow_ids"], b["tokens"])
-                pkts += len(b["flow_ids"])
-            dt = time.perf_counter() - t0
+                fused_eng.reset()
+
+            def timed(sink, submit=None):
+                stream = FlowScenario(
+                    kind=kind, pkt_len=16,
+                    packets_per_batch=128 if fast else 256, seed=7,
+                )
+                warm = stream.next_batch()  # compile outside the timed region
+                sink.ingest(warm["flow_ids"], warm["tokens"])
+                t0 = time.perf_counter()
+                pkts = 0
+                for _ in range(batches):
+                    b = stream.next_batch()
+                    if submit is None:
+                        sink.ingest(b["flow_ids"], b["tokens"])
+                    else:
+                        submit(b)  # async ring path; drained below
+                    pkts += len(b["flow_ids"])
+                if submit is not None:
+                    sink.drain()
+                return pkts, time.perf_counter() - t0
+
+            pkts, dt = timed(eng)
+            legacy_pps = pkts / dt
             rows.append(_emit(
                 f"serve/flow/{kind}/{backend}",
-                dt / max(pkts, 1) * 1e6, pkts / dt, eng,
+                dt / max(pkts, 1) * 1e6, legacy_pps, eng,
+            ))
+            pkts, dt = timed(
+                pipe, submit=lambda b: pipe.submit(b["flow_ids"], b["tokens"])
+            )
+            fused_pps = pkts / dt
+            rows.append(_emit(
+                f"serve/flow/{kind}/{backend}+fused",
+                dt / max(pkts, 1) * 1e6, fused_pps, fused_eng,
+            ))
+            # derived-only comparison row (no pps key -> the regression
+            # gate never compares it; the speedup is informational)
+            rows.append(csv_row(
+                f"serve/flow/{kind}/{backend}+fused-vs-legacy", 0.0,
+                f"speedup={fused_pps / legacy_pps:.2f}"
+                f";fused_pps={fused_pps:.0f};legacy_pps={legacy_pps:.0f}",
             ))
     return rows
 

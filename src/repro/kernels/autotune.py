@@ -22,8 +22,19 @@ Tile semantics per family:
   window_attention    {"blk_q": Bq, "blk_k": Bk} — pure performance knobs.
   decode_step         {"chunk_size": L}   — ring length; semantic like
       chimera's L, swept for the roofline tables only.
+  flow_ingest         {"lane_tile": lt, "state_tile": st} — pure perf
+      knobs of the fused-ingest score stage: lt tiles the packet-lane
+      axis through the grid pipeline, st chunks the TCAM ternary match
+      over the rule axis.  Swept as a lanes × state-tile grid under the
+      Eq. 11 VMEM budget.
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/autotune.json``.
+The file is a versioned envelope ``{"__schema__": 2, "entries": {...}}``;
+keys include family, backend, every problem dim, and dtype, so a tuned
+entry can never be served to a different kernel configuration.  Files
+written before the envelope existed (pre-flow_ingest) carried bare entries
+whose keys predate the flow_ingest dim set — they are discarded wholesale
+on load rather than risking a stale-tile hit.
 """
 
 from __future__ import annotations
@@ -57,8 +68,18 @@ def default_cache_path() -> str:
 # On-disk cache
 # --------------------------------------------------------------------------
 
+CACHE_SCHEMA = 2  # bumped when the key schema changes (v2: flow_ingest dims)
+
+
 class AutotuneCache:
-    """JSON file cache: key -> {"tiles": {...}, "us": float}."""
+    """JSON file cache: key -> {"tiles": {...}, "us": float}.
+
+    On disk the entries live inside a ``{"__schema__": N, "entries": {}}``
+    envelope.  A file whose schema is missing (pre-versioning flat dict) or
+    differs from :data:`CACHE_SCHEMA` is treated as empty — stale keys from
+    an older key schema must never satisfy a lookup — and is rewritten in
+    the current schema on the next :meth:`save`.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
@@ -68,8 +89,16 @@ class AutotuneCache:
         if self._data is None:
             try:
                 with open(self.path) as f:
-                    self._data = json.load(f)
+                    raw = json.load(f)
             except (OSError, ValueError):
+                raw = None
+            if (
+                isinstance(raw, dict)
+                and raw.get("__schema__") == CACHE_SCHEMA
+                and isinstance(raw.get("entries"), dict)
+            ):
+                self._data = raw["entries"]
+            else:
                 self._data = {}
         return self._data
 
@@ -87,7 +116,10 @@ class AutotuneCache:
             os.makedirs(d, exist_ok=True)
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump(self._data, f, indent=1, sort_keys=True)
+            json.dump(
+                {"__schema__": CACHE_SCHEMA, "entries": self._data},
+                f, indent=1, sort_keys=True,
+            )
         os.replace(tmp, self.path)
 
     def __len__(self) -> int:
@@ -129,6 +161,16 @@ def vmem_bytes(family: str, tiles: Tiles, dims: Dims) -> int:
         gq = dims.get("gq", 1)
         blocks = gq * (2 * d + 2 * dv + m) + L * (2 * d + 2 * dv + m) + m * (dv + 1)
         return _BYTES * (_PIPELINE * blocks + m * (dv + 1))
+    if family == "flow_ingest":
+        lt, st = tiles["lane_tile"], tiles["state_tile"]
+        d, W = dims["d"], dims["w_words"]
+        K = dims.get("n_classes", 8)
+        # streamed per-lane-block traffic (pooled, sig, sticky in; logits +
+        # 4 scalar outputs) is double-buffered through the grid pipeline;
+        # the TCAM chunk working set and the dense head tables stay resident
+        stream = lt * (d + W + 1) + lt * (K + 4)
+        resident = st * (2 * W + 2) + d * (K + 1)
+        return _BYTES * (_PIPELINE * stream + resident)
     raise KeyError(f"unknown kernel family {family!r}")
 
 
@@ -175,6 +217,19 @@ def candidate_tiles(
                 if T % bk != 0 or W % bk != 0 or bq % bk != 0:
                     continue
                 t = {"blk_q": bq, "blk_k": bk}
+                if fits_vmem(family, t, dims, spec):
+                    cands.append(t)
+        return cands
+    if family == "flow_ingest":
+        lanes = dims.get("lanes", 0)
+        cands = []
+        for lt in (8, 16) + _POW2:
+            # the engine launches pow2 widths from min_chunk_lanes..lanes;
+            # a divisor of lanes tiles every width it will ever see
+            if lanes and (lt > lanes or lanes % lt != 0):
+                continue
+            for st in (8, 16) + _POW2:
+                t = {"lane_tile": lt, "state_tile": st}
                 if fits_vmem(family, t, dims, spec):
                     cands.append(t)
         return cands

@@ -11,6 +11,9 @@ checks the seed repo scattered across the ``ops.py`` wrappers:
   decode_step          fused per-token streaming decode (serve hot path)
   flow_score           streaming trust/class scoring over the per-flow
                        (Σh, count, signature) aggregates (FlowEngine)
+  flow_ingest          fused whole-batch flow ingest: table-resident
+                       gather → decode → score/veto → scatter, one launch
+                       per pre-packed chunk stack (FlowEngine --fused)
 
   backend              implementation
   ------------------   ----------------------------------------------------
@@ -278,3 +281,50 @@ def _flow_score_reference(plan, tables, rules, hidden_sum, count, sig, sticky):
     return reference_flow_score(
         plan, tables, rules, hidden_sum, count, sig, sticky
     )
+
+
+# ==========================================================================
+# flow_ingest — canonical signature (a BUILDER, not the kernel itself):
+#   (ccfg: ClassifierConfig, n_slots: int, int_plan=None, *, tiles=None)
+#     -> fused(params, rules, caches, positions, sig, hidden_sum, vetoed,
+#              idx (C,w) int32, tokens (C,w,pkt_len) int32, fresh (C,w) bool,
+#              n_chunks () int32)
+#        -> (caches, positions, sig, hidden_sum, vetoed, outs)
+# The engine jits the built callable once (donating the table state) and
+# feeds it pow2-bucketed chunk stacks; ``n_chunks`` is traced, so varying
+# round counts never retrace.  ``reference`` scans the unmodified
+# make_flow_step body (bit-exact to the per-round path by construction);
+# the Pallas backends swap in the flow_ingest/kernel.py score stage, tuned
+# by ``tiles`` = {"lane_tile", "state_tile"} from the autotuner.
+# ``int-emulation`` reuses the reference structure — the lowered int32
+# score program rides ``int_plan``.  Imports are lazy: the builders live
+# next to the engine, which imports this registry.
+# ==========================================================================
+
+@register("flow_ingest", "reference")
+def _flow_ingest_reference(ccfg, n_slots, int_plan=None, *, tiles=None):
+    from repro.kernels.flow_ingest.ref import fused_ingest_ref
+
+    return fused_ingest_ref(ccfg, n_slots, int_plan=int_plan, tiles=tiles)
+
+
+@register("flow_ingest", "int-emulation")
+def _flow_ingest_int(ccfg, n_slots, int_plan=None, *, tiles=None):
+    from repro.kernels.flow_ingest.ref import fused_ingest_ref
+
+    return fused_ingest_ref(ccfg, n_slots, int_plan=int_plan, tiles=tiles)
+
+
+def _flow_ingest_pallas(interpret: bool):
+    def impl(ccfg, n_slots, int_plan=None, *, tiles=None):
+        from repro.kernels.flow_ingest.kernel import fused_ingest_pallas
+
+        return fused_ingest_pallas(
+            ccfg, n_slots, int_plan=int_plan, tiles=tiles, interpret=interpret
+        )
+
+    return impl
+
+
+register("flow_ingest", "pallas-tpu")(_flow_ingest_pallas(interpret=False))
+register("flow_ingest", "pallas-interpret")(_flow_ingest_pallas(interpret=True))

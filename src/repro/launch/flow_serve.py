@@ -4,6 +4,16 @@ deploy it on the flow-table runtime, stream FlowScenario packets through it.
     PYTHONPATH=src python -m repro.launch.flow_serve --scenario port-scan \
         --batches 8 --capacity 2048 [--backend pallas-interpret] [--ledger]
 
+Fused ingest: ``--fused`` serves through the single-launch ``flow_ingest``
+path (DESIGN.md §15) — one device launch per width group instead of one
+per arrival round, pre-traced by ``warm_fused`` and driven through the
+:class:`~repro.serve.ingest_pipeline.AsyncIngestPipeline` ring so host
+packing overlaps device compute.  Decisions are bit-identical to the
+per-round path (see ``tests/test_fused_ingest.py``).
+
+    PYTHONPATH=src python -m repro.launch.flow_serve --smoke --fused \
+        --scenario protocol-mix --batches 16
+
 Scale-out: ``--num-shards N`` deploys a ShardedFlowEngine over N devices
 (the mesh ``data`` axis).  On CPU hosts pass ``--host-devices N`` (or set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) to expose N
@@ -43,6 +53,11 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=2048)
     ap.add_argument("--lanes", type=int, default=256)
     ap.add_argument("--idle-timeout", type=int, default=0)
+    ap.add_argument("--fused", action="store_true",
+                    help="single-launch fused ingest (DESIGN.md §15): whole "
+                         "batch per width group via the flow_ingest kernel "
+                         "family, with the async ring pipeline overlapping "
+                         "host packing and device compute")
     ap.add_argument("--backend", default=None,
                     help="xla | auto | pallas-tpu | pallas-interpret | "
                          "reference | int-emulation")
@@ -124,8 +139,11 @@ def main() -> None:
     if args.save_program:
         program.save(args.save_program)
         print(f"program saved to {args.save_program}")
+    if args.fused and args.num_shards:
+        ap.error("--fused is single-device (ShardedFlowEngine launches "
+                 "per-shard rounds); drop one of --fused/--num-shards")
     fcfg = FlowEngineConfig(capacity=args.capacity, lanes=args.lanes,
-                            idle_timeout=args.idle_timeout)
+                            idle_timeout=args.idle_timeout, fused=args.fused)
     engine = program.deploy(
         fcfg, num_shards=args.num_shards if args.num_shards else None
     )
@@ -137,13 +155,28 @@ def main() -> None:
             engine, cfg=AdaptiveLoopConfig(sync=args.adapt_sync)
         )
 
+    pipe = None
+    if args.fused:
+        n = engine.warm_fused(args.pkt_len)  # pre-trace outside the timer
+        print(f"fused: warmed {n} width trace(s), "
+              f"ring depth {fcfg.ring_slots}")
+        if loop is None:
+            from repro.serve.ingest_pipeline import AsyncIngestPipeline
+
+            pipe = AsyncIngestPipeline(engine)
+
     t0 = time.perf_counter()
     pkts = 0
-    sink = loop if loop is not None else engine
+    sink = loop if loop is not None else (pipe or engine)
     for _ in range(args.batches):
         batch = scenario.next_batch()
-        sink.ingest(batch["flow_ids"], batch["tokens"])
+        if pipe is not None:
+            pipe.submit(batch["flow_ids"], batch["tokens"])
+        else:
+            sink.ingest(batch["flow_ids"], batch["tokens"])
         pkts += len(batch["flow_ids"])
+    if pipe is not None:
+        pipe.drain()
     if loop is not None:
         loop.close()  # drain any in-flight control-plane epoch
     dt = time.perf_counter() - t0

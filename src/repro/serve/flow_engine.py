@@ -53,6 +53,9 @@ class FlowEngineConfig:
     t_cp_s: float = 0.0  # control-plane epoch for Eq. 18 checks (0 = off)
     backend: Optional[str] = None  # kernel backend ("xla" | dispatch name)
     horizon: int = 1024  # Eq. 39 flow-length horizon (int-emulation lowering)
+    fused: bool = False  # single-launch fused ingest (flow_ingest family)
+    min_chunk_lanes: int = 8  # smallest padded width for tail arrival rounds
+    ring_slots: int = 4  # host staging-ring depth (AsyncIngestPipeline)
 
 
 @dataclasses.dataclass
@@ -84,7 +87,9 @@ class SwapRecord:
     source: str = "manual"  # "manual" | "delta" (audited ProgramDelta)
 
 
-def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int, int_plan=None):
+def make_flow_step(
+    ccfg: C.ClassifierConfig, n_slots: int, int_plan=None, *, score_fn=None
+):
     """Build the jitted flow-table update step over ``n_slots`` table rows.
 
     One arrival round of lanes: gather the touched rows (lazily zeroing
@@ -103,6 +108,12 @@ def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int, int_plan=None):
     the int32 fixed-point accumulator, and the ``rules`` argument carries
     ``(rules, int_tables)`` so table swaps reuse the traced step.  The
     backbone scan is unchanged (float, bit-identical to the xla path).
+
+    ``score_fn`` (float path only) swaps the streaming-score stage for a
+    kernel implementation with the same canonical signature
+    ``(params, rules, pooled, sig, sticky) -> (outputs, new_sticky)`` — the
+    hook the ``flow_ingest`` Pallas backends use; ``None`` keeps the
+    :func:`repro.train.classifier.streaming_scores` oracle.
     """
     arch = ccfg.arch
     if int_plan is not None:
@@ -150,7 +161,10 @@ def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int, int_plan=None):
             out = dequantize_scores(int_plan, out)  # engine float contract
         else:
             pooled = hs / jnp.maximum(pos, 1)[:, None].astype(jnp.float32)
-            out, vt = C.streaming_scores(ccfg, params, rules, pooled, sg, vt)
+            if score_fn is not None:
+                out, vt = score_fn(params, rules, pooled, sg, vt)
+            else:
+                out, vt = C.streaming_scores(ccfg, params, rules, pooled, sg, vt)
         out["sig"] = sg  # cumulative signature after this packet (drift stats)
 
         def put(c, u):
@@ -164,6 +178,161 @@ def make_flow_step(ccfg: C.ClassifierConfig, n_slots: int, int_plan=None):
         return caches, positions, sig, hidden_sum, vetoed, out
 
     return step
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+# chunk-axis bucket floor for fused launches: the chunk stack is padded to
+# max(8, next_pow2(C)).  Padded chunks cost only host-buffer transfer (the
+# traced n_chunks trip count skips them on device), while the floor pins the
+# launch shape for every group of ≤ 8 chunks — so steady-state serving sees
+# ONE trace per width instead of one per (width, chunk-count) pair.
+_CHUNK_FLOOR = 8
+
+
+def pack_width_groups(
+    slots: np.ndarray, lanes: int, min_lanes: int = 8
+) -> List[Tuple[int, List[np.ndarray]]]:
+    """Pre-pack arrival rounds into width-bucketed chunk groups.
+
+    The per-round hot path pads *every* round to the full ``lanes`` width,
+    so a heavy-tail flow that forces 8 arrival rounds costs 8 full-width
+    launches even when the late rounds hold a handful of packets.  Here
+    each round is split into chunks of at most ``lanes`` packets, each
+    chunk is assigned the smallest power-of-two width that holds it
+    (clamped to ``[min_lanes, lanes]``), and *consecutive* chunks sharing a
+    width are grouped so one fused launch scans them all.  Order across
+    groups preserves round order — round r+1 of a flow always executes
+    after round r (consecutive rounds can never merge: every flow in round
+    r+1 also appears in round r by construction).
+
+    Returns ``[(width, [packet-index arrays])]``.
+    """
+    groups: List[Tuple[int, List[np.ndarray]]] = []
+    for round_lanes in arrival_rounds(list(slots)):
+        for c0 in range(0, len(round_lanes), lanes):
+            ch = np.asarray(round_lanes[c0 : c0 + lanes], np.intp)
+            w = min(lanes, _next_pow2(max(len(ch), min_lanes)))
+            if groups and groups[-1][0] == w:
+                groups[-1][1].append(ch)
+            else:
+                groups.append((w, [ch]))
+    return groups
+
+
+def make_fused_ingest(
+    ccfg: C.ClassifierConfig, n_slots: int, int_plan=None, *, score_fn=None
+):
+    """Build the fused whole-batch ingest step (``flow_ingest`` family).
+
+    One launch consumes a stack of pre-packed arrival-round chunks: the
+    flow table stays resident on-device while an on-device loop runs the
+    *identical* :func:`make_flow_step` body — gather by slot, token decode
+    scan, streaming scores + TCAM veto, scatter-update — once per chunk.
+    Because the loop body is the same traced function the per-round engine
+    jits, the fused path is bit-exact to the per-round path by
+    construction (the ``reference`` backend's conformance contract).
+
+    Signature of the returned callable::
+
+        fused(params, rules, caches, positions, sig, hidden_sum, vetoed,
+              idx (C, w) int32, tokens (C, w, pkt_len) int32,
+              fresh (C, w) bool, n_chunks () int32)
+          -> (caches, positions, sig, hidden_sum, vetoed, outs)
+
+    ``C`` may exceed ``n_chunks`` (the host pads the chunk axis to a
+    power-of-two bucket so varying round counts never retrace); padding
+    chunks are *skipped*, not masked — the loop trip count is the traced
+    ``n_chunks`` scalar, so they cost nothing.  ``outs`` stacks the
+    per-chunk score outputs on a leading ``C`` axis (rows ≥ ``n_chunks``
+    stay zero).
+    """
+    step = make_flow_step(ccfg, n_slots, int_plan=int_plan, score_fn=score_fn)
+
+    def fused(params, rules, caches, positions, sig, hidden_sum, vetoed,
+              idx, tokens, fresh, n_chunks):
+        C = idx.shape[0]
+        out_ab = jax.eval_shape(
+            step, params, rules, caches, positions, sig, hidden_sum, vetoed,
+            idx[0], tokens[0], fresh[0],
+        )[5]
+        outs0 = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((C,) + a.shape, a.dtype), out_ab
+        )
+
+        def body(j, carry):
+            caches, positions, sig, hidden_sum, vetoed, outs = carry
+
+            def at(x):
+                return jax.lax.dynamic_index_in_dim(x, j, 0, keepdims=False)
+
+            caches, positions, sig, hidden_sum, vetoed, out = step(
+                params, rules, caches, positions, sig, hidden_sum, vetoed,
+                at(idx), at(tokens), at(fresh),
+            )
+            outs = jax.tree_util.tree_map(
+                lambda buf, o: jax.lax.dynamic_update_index_in_dim(buf, o, j, 0),
+                outs, out,
+            )
+            return caches, positions, sig, hidden_sum, vetoed, outs
+
+        return jax.lax.fori_loop(
+            0, n_chunks, body,
+            (caches, positions, sig, hidden_sum, vetoed, outs0),
+        )
+
+    return fused
+
+
+class _PendingIngest:
+    """Handle for a dispatched-but-unharvested fused ingest batch.
+
+    :meth:`FlowEngine._dispatch_fused` returns one of these *before*
+    blocking on device results, so the async pipeline can pack and dispatch
+    the next batch while the device chews on this one.  ``finalize()``
+    blocks (the first host read of the output arrays) and unpacks the
+    per-chunk score stacks into the per-packet dict ``ingest`` returns.
+    """
+
+    def __init__(self, engine, flow_ids, n_packets: int, launches):
+        self.engine = engine
+        self.flow_ids = flow_ids
+        self.n_packets = n_packets
+        self.launches = launches  # [(outs pytree, [chunk packet-index arrays])]
+        self._result: Optional[Dict[str, np.ndarray]] = None
+
+    def finalize(self) -> Dict[str, np.ndarray]:
+        if self._result is not None:
+            return self._result
+        P = self.n_packets
+        out = {
+            "flow_ids": self.flow_ids,
+            "trust": np.empty((P,), np.float32),
+            "vetoed": np.empty((P,), bool),
+            "pred": np.empty((P,), np.int32),
+            "s_nn": np.empty((P,), np.float32),
+            "s_sym": np.empty((P,), np.float32),
+            "sig": np.zeros((P, self.engine.ccfg.sig_words), np.uint32),
+        }
+        for outs, chunks in self.launches:
+            trust = np.asarray(outs["trust"], np.float32)
+            hard = np.asarray(outs["hard_hit"])
+            logits = np.asarray(outs["class_logits"])
+            s_nn = np.asarray(outs["s_nn"], np.float32)
+            s_sym = np.asarray(outs["s_sym"], np.float32)
+            sig = np.asarray(outs["sig"])
+            for j, ch in enumerate(chunks):
+                n = len(ch)
+                out["trust"][ch] = trust[j, :n]
+                out["vetoed"][ch] = hard[j, :n]
+                out["pred"][ch] = np.argmax(logits[j, :n], -1).astype(np.int32)
+                out["s_nn"][ch] = s_nn[j, :n]
+                out["s_sym"][ch] = s_sym[j, :n]
+                out["sig"][ch] = sig[j, :n]
+        self._result = out
+        return out
 
 
 class FlowTableDirectory:
@@ -363,6 +532,81 @@ class FlowEngine:
             self._make_step(), donate_argnums=(2, 3, 4, 5, 6)
         )
 
+        # fused single-launch ingest (flow_ingest kernel family): one jitted
+        # callable shared by every (width, chunk-bucket) shape — the pow2
+        # bucketing in _dispatch_fused bounds its trace count.  The kernel
+        # backends only differ in the score stage; xla / int-emulation fall
+        # back to the reference builder (same fused structure, oracle
+        # scores), so --fused composes with every backend.
+        self._jit_fused = None
+        self._staging: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
+        if fcfg.fused:
+            from repro.kernels import autotune
+            from repro.kernels.dispatch import resolve
+
+            fam_backend = (
+                self.backend
+                if self.backend in ("pallas-tpu", "pallas-interpret")
+                else "reference"
+            )
+            tiles = None
+            if fam_backend != "reference":
+                tiles = autotune.get_tiles(
+                    "flow_ingest", self.flow_ingest_dims(), fam_backend
+                )
+            self._jit_fused = jax.jit(
+                resolve("flow_ingest", fam_backend)(
+                    self.ccfg, self._n_slots, int_plan=self._int_plan,
+                    tiles=tiles,
+                ),
+                donate_argnums=(2, 3, 4, 5, 6),
+            )
+
+    def flow_ingest_dims(self) -> Dict[str, int]:
+        """Problem dims the autotuner keys the flow_ingest sweep on."""
+        return {
+            "lanes": self.fcfg.lanes,
+            "d": self.ccfg.arch.d_model,
+            "w_words": self.ccfg.sig_words,
+            "rules": int(self.rules.weights.shape[0]),
+            "n_classes": self.ccfg.n_classes,
+        }
+
+    def warm_fused(self, pkt_len: int, max_chunks: int = _CHUNK_FLOOR) -> int:
+        """Pre-trace every fused launch shape traffic can produce.
+
+        One dummy scratch-only launch per pow2 width in
+        [min_chunk_lanes, lanes] at the chunk-bucket floor — after this,
+        steady-state ingest never retraces (until a batch exceeds
+        ``max_chunks`` same-width chunks, which escalates the bucket).
+        Scratch-row launches don't perturb real flow state.  Returns the
+        number of shapes traced.  Optional: serving works without it, at
+        the cost of first-contact traces mid-stream.
+        """
+        if self._jit_fused is None:
+            return 0
+        scratch = self.fcfg.capacity
+        c_pad = max(_CHUNK_FLOOR, _next_pow2(max_chunks))
+        # pack_width_groups emits min(lanes, pow2): every pow2 below lanes,
+        # plus lanes itself when it is not a power of two
+        widths = []
+        w = max(self.fcfg.min_chunk_lanes, 1)
+        while w < self.fcfg.lanes:
+            widths.append(w)
+            w *= 2
+        widths.append(self.fcfg.lanes)
+        for w in widths:
+            idx = jnp.full((c_pad, w), scratch, jnp.int32)
+            tok = jnp.zeros((c_pad, w, pkt_len), jnp.int32)
+            fr = jnp.zeros((c_pad, w), bool)
+            (self.caches, self.positions, self.sig, self.hidden_sum,
+             self.vetoed, _) = self._jit_fused(
+                self.params, self._step_rules(), self.caches, self.positions,
+                self.sig, self.hidden_sum, self.vetoed,
+                idx, tok, fr, jnp.int32(0),
+            )
+        return len(widths)
+
     # ------------------------------------------------------------------
     # compiled-program deployment (the front-door construction path)
     # ------------------------------------------------------------------
@@ -487,11 +731,24 @@ class FlowEngine:
         parallel); ``tokens`` (P, pkt_len) int32.  Returns per-packet outputs
         aligned with the input order: ``trust``, ``vetoed``, ``pred``,
         ``s_nn``, ``s_sym`` reflecting each flow's state *after* its packet.
+
+        With ``fcfg.fused`` the batch goes through the single-launch
+        ``flow_ingest`` path (:meth:`_dispatch_fused`) instead of one jitted
+        launch per arrival round; results are bit-identical by construction.
         """
         flow_ids = np.asarray(flow_ids)
         tokens = np.asarray(tokens, np.int32)
         P, pkt_len = tokens.shape
         assert flow_ids.shape == (P,), (flow_ids.shape, P)
+        slots, fresh = self._resolve_slots(flow_ids)
+        if self._jit_fused is not None:
+            return self._dispatch_fused(flow_ids, tokens, slots, fresh).finalize()
+        return self._ingest_rounds(flow_ids, tokens, slots, fresh)
+
+    def _resolve_slots(self, flow_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Host bookkeeping for one batch: tick, LRU touch, idle sweep, slot
+        assignment.  Shared verbatim by the per-round and fused paths so both
+        observe the identical eviction sequence."""
         self._tick += 1
         self.stats.ticks += 1
 
@@ -506,11 +763,20 @@ class FlowEngine:
             self.table.touch(fid, self._tick)
         self.evict_idle()
 
+        P = len(flow_ids)
         slots = np.empty((P,), np.int32)
         fresh = np.zeros((P,), bool)
         for i, fid in enumerate(flow_ids.tolist()):
             slots[i], fresh[i] = self._slot_for(fid)
+        return slots, fresh
 
+    def _ingest_rounds(
+        self, flow_ids: np.ndarray, tokens: np.ndarray,
+        slots: np.ndarray, fresh: np.ndarray,
+    ) -> Dict[str, np.ndarray]:
+        """Legacy per-round hot path: one jitted launch per arrival round,
+        every round padded to the full ``lanes`` width."""
+        P, pkt_len = tokens.shape
         out_trust = np.empty((P,), np.float32)
         out_veto = np.empty((P,), bool)
         out_pred = np.empty((P,), np.int32)
@@ -557,6 +823,67 @@ class FlowEngine:
             "s_sym": out_s_sym,
             "sig": out_sig,
         }
+
+    def _dispatch_fused(
+        self, flow_ids: np.ndarray, tokens: np.ndarray,
+        slots: np.ndarray, fresh: np.ndarray,
+        staging: Optional[Dict] = None,
+    ) -> _PendingIngest:
+        """Pack this batch's arrival rounds into width-bucketed chunk stacks
+        and launch the fused kernel once per width group — then return
+        WITHOUT blocking on device results.
+
+        Width bucketing is the dispatch-cost fix: the per-round path pads
+        every round to ``lanes``, so the long tail of small rounds (a flow's
+        2nd..Nth packet in a batch) pays full-width compute.  Here a round's
+        chunks get the smallest pow2 width ≥ its occupancy (floored at
+        ``min_chunk_lanes``) and consecutive same-width chunks ride one
+        launch.  The chunk axis is also pow2-padded (``fori_loop`` skips the
+        padding — its trip count is the traced ``n_chunks``), so the jit
+        trace count is bounded by O(log lanes · log chunks) shapes, not by
+        traffic shape.
+
+        ``staging`` lets :class:`~repro.serve.ingest_pipeline.AsyncIngestPipeline`
+        substitute a ring slot's private buffer pool so host packing of
+        batch k+1 never races the in-flight transfer of batch k.
+        """
+        P, pkt_len = tokens.shape
+        lanes, scratch = self.fcfg.lanes, self.fcfg.capacity
+        pool = self._staging if staging is None else staging
+        launches = []
+        for w, chunks in pack_width_groups(
+            slots, lanes, self.fcfg.min_chunk_lanes
+        ):
+            c_pad = max(_CHUNK_FLOOR, _next_pow2(len(chunks)))
+            key = (w, c_pad, pkt_len)
+            buf = pool.get(key)
+            if buf is None:
+                buf = pool[key] = {
+                    "idx": np.empty((c_pad, w), np.int32),
+                    "tok": np.empty((c_pad, w, pkt_len), np.int32),
+                    "fr": np.empty((c_pad, w), bool),
+                }
+            idx, tok, fr = buf["idx"], buf["tok"], buf["fr"]
+            idx.fill(scratch)
+            tok.fill(0)
+            fr.fill(False)
+            for j, ch in enumerate(chunks):
+                n = len(ch)
+                idx[j, :n] = slots[ch]
+                tok[j, :n] = tokens[ch]
+                fr[j, :n] = fresh[ch]
+            (self.caches, self.positions, self.sig, self.hidden_sum,
+             self.vetoed, outs) = self._jit_fused(
+                self.params, self._step_rules(), self.caches, self.positions,
+                self.sig, self.hidden_sum, self.vetoed,
+                jnp.asarray(idx), jnp.asarray(tok), jnp.asarray(fr),
+                jnp.int32(len(chunks)),
+            )
+            self.stats.rounds += len(chunks)
+            launches.append((outs, chunks))
+        self.stats.packets += P
+        self.stats.tokens += P * pkt_len
+        return _PendingIngest(self, flow_ids, P, launches)
 
     # ------------------------------------------------------------------
     # per-flow snapshot

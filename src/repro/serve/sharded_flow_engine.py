@@ -105,22 +105,38 @@ class ShardedFlowEngine:
         self.num_shards = S
 
         arch, self.backend = apply_kernel_backend(ccfg.arch, fcfg.backend)
-        if self.backend == "int-emulation":
-            raise NotImplementedError(
-                "int-emulation is single-device only for now: the lowered "
-                "int tables are not yet placed per shard (deploy with "
-                "FlowEngine.from_program instead)"
-            )
         self.ccfg = dataclasses.replace(ccfg, arch=arch)
         self.fcfg = fcfg
         self.stats = FlowStats()
         self.swap_history: List[SwapRecord] = []
         self.program = None  # set by from_program
 
+        # int-emulation: the lowered plan/tables are pure functions of
+        # (ccfg, params, rules, horizon) — flow-independent, so they shard
+        # trivially by REPLICATION: every device carries the same int32
+        # tables (they ride the jitted step's replicated rules argument,
+        # exactly like the float RuleSet), while only the flow state rows
+        # split over 'data'.
+        self._int_plan = None
+        self._int_tables = None
+        self._int_entries: List = []
+        if self.backend == "int-emulation":
+            from repro.compile.int_lowering import lower_scores
+            from repro.compile.ledger import ResourceLedger
+
+            self._int_plan, self._int_tables, self._int_entries = lower_scores(
+                self.ccfg, params, rules, horizon=fcfg.horizon
+            )
+            deploy_ledger = ResourceLedger()
+            deploy_ledger.extend(self._int_entries)
+            deploy_ledger.raise_if_over()
+
         self._replicated = NamedSharding(mesh, P())
         self._row_sharded = NamedSharding(mesh, P("data"))
         self.params = jax.device_put(params, self._replicated)
         self.rules = jax.device_put(rules, self._replicated)
+        if self._int_tables is not None:
+            self._int_tables = jax.device_put(self._int_tables, self._replicated)
 
         # per-shard slot-batched state (capacity real slots + one scratch
         # slot absorbing padding lanes), stacked on a leading shard axis
@@ -139,7 +155,8 @@ class ShardedFlowEngine:
         W, d = self.ccfg.sig_words, arch.d_model
         self.positions = shardwise(jnp.zeros((self._n_slots,), jnp.int32))
         self.sig = shardwise(jnp.zeros((self._n_slots, W), jnp.uint32))
-        self.hidden_sum = shardwise(jnp.zeros((self._n_slots, d), jnp.float32))
+        hs_dtype = jnp.int32 if self._int_plan is not None else jnp.float32
+        self.hidden_sum = shardwise(jnp.zeros((self._n_slots, d), hs_dtype))
         self.vetoed = shardwise(jnp.zeros((self._n_slots,), bool))
 
         # one host-side directory per shard: allocation, LRU and idle
@@ -156,7 +173,7 @@ class ShardedFlowEngine:
             self._n_slots, self.per_flow_state_bytes(), budget
         )
 
-        step = make_flow_step(self.ccfg, self._n_slots)
+        step = make_flow_step(self.ccfg, self._n_slots, int_plan=self._int_plan)
 
         def shard_step(params, rules, caches, positions, sig, hidden_sum,
                        vetoed, idx, tokens, fresh):
@@ -205,17 +222,22 @@ class ShardedFlowEngine:
         audit trail covers the sharded placement.
         """
         kw = _engine_kwargs_from_program(program, backend=fcfg.backend)
-        fcfg = dataclasses.replace(fcfg, backend=kw["backend"])
+        fcfg = dataclasses.replace(
+            fcfg, backend=kw["backend"], horizon=program.horizon
+        )
         eng = cls(
             kw["ccfg"], kw["params"], kw["rules"], fcfg,
             mesh=mesh, num_shards=num_shards,
         )
         eng.program = program
         ledger = program.ledger
-        # re-deploys refresh (not duplicate) the placement entry
+        # re-deploys refresh (not duplicate) the placement and int-lowering
+        # entries so the ledger describes the active deployment
         ledger.entries = [
-            e for e in ledger.entries if e.stage != "flow-table-sharding"
+            e for e in ledger.entries
+            if e.stage not in ("flow-table-sharding", "int-lowering")
         ]
+        ledger.entries.extend(eng._int_entries)
         ledger.add(
             "flow-table-sharding", "per-shard-table-bytes",
             used=eng.shard_state_bytes(), budget=eng.state_budget_bytes,
@@ -234,6 +256,13 @@ class ShardedFlowEngine:
     def shard_of(self, fid: int) -> int:
         """Owner shard of a flow ID (deterministic, batch-independent)."""
         return int(flow_shard([fid], self.num_shards)[0])
+
+    def _step_rules(self):
+        """The replicated ``rules`` argument of the jitted step: the packed
+        RuleSet, paired with the lowered int tables under int-emulation."""
+        if self._int_plan is not None:
+            return (self.rules, self._int_tables)
+        return self.rules
 
     def per_flow_state_bytes(self) -> int:
         """Bytes of one flow-table entry (identical to the single-device
@@ -378,7 +407,7 @@ class ShardedFlowEngine:
                     chunk_of[s] = sel
             (self.caches, self.positions, self.sig, self.hidden_sum,
              self.vetoed, out) = self._jit_step(
-                self.params, self.rules, self.caches, self.positions,
+                self.params, self._step_rules(), self.caches, self.positions,
                 self.sig, self.hidden_sum, self.vetoed,
                 jax.device_put(idx, self._row_sharded),
                 jax.device_put(tok, self._row_sharded),
@@ -423,11 +452,24 @@ class ShardedFlowEngine:
         reads the owner shard's table rows)."""
         s = self.shard_of(fid)
         slot = self.tables[s].slot_of[fid]
-        pooled = self.hidden_sum[s, slot] / jnp.maximum(self.positions[s, slot], 1)
-        out, _ = C.streaming_scores(
-            self.ccfg, self.params, self.rules,
-            pooled[None], self.sig[s, slot][None], self.vetoed[s, slot][None],
-        )
+        if self._int_plan is not None:
+            from repro.compile.int_lowering import dequantize_scores
+            from repro.kernels.dispatch import resolve
+
+            out, _ = resolve("flow_score", "int-emulation")(
+                self._int_plan, self._int_tables, self.rules,
+                self.hidden_sum[s, slot][None], self.positions[s, slot][None],
+                self.sig[s, slot][None], self.vetoed[s, slot][None],
+            )
+            out = dequantize_scores(self._int_plan, out)
+        else:
+            pooled = (
+                self.hidden_sum[s, slot] / jnp.maximum(self.positions[s, slot], 1)
+            )
+            out, _ = C.streaming_scores(
+                self.ccfg, self.params, self.rules,
+                pooled[None], self.sig[s, slot][None], self.vetoed[s, slot][None],
+            )
         return {
             "trust": float(out["trust"][0]),
             "vetoed": bool(out["hard_hit"][0]),
@@ -467,10 +509,28 @@ class ShardedFlowEngine:
         def _install():
             repl = jax.device_put(new, self._replicated)
             installed["rules"] = atomic_swap(old, repl)
+            if self._int_plan is not None:
+                # re-lower the soft-rule weight column (replicated, like the
+                # RuleSet) so every shard's int score path reads the NEW
+                # table; counted inside the measured install — the Eq. 18
+                # budget covers everything the swap deploys on every device
+                from repro.compile.int_lowering import requantize_rule_weights
+
+                installed["tables"] = {
+                    **self._int_tables,
+                    "rule_w": jax.device_put(
+                        requantize_rule_weights(
+                            self._int_plan, installed["rules"].weights
+                        ),
+                        self._replicated,
+                    ),
+                }
             return installed["rules"]
 
         dt = measure_install_time(_install)
         self.rules = installed["rules"]
+        if "tables" in installed:
+            self._int_tables = installed["tables"]
         ok = (
             hardware_model.install_time_ok(dt, self.fcfg.t_cp_s)
             if self.fcfg.t_cp_s

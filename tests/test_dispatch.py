@@ -4,6 +4,7 @@ round-trips on disk, the Eq. 11 VMEM budget guard filters candidates, and
 the backend axis is selectable end-to-end (engine / launcher / config)."""
 
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +52,7 @@ class TestRegistry:
 
     def test_family_backend_matrix(self):
         assert dispatch.families() == (
-            "chimera_attention", "decode_step", "flow_score",
+            "chimera_attention", "decode_step", "flow_ingest", "flow_score",
             "window_attention",
         )
         for family in self.BACKBONE_FAMILIES:
@@ -59,6 +60,11 @@ class TestRegistry:
                 "pallas-tpu", "pallas-interpret", "reference"
             )
         assert dispatch.backends("flow_score") == ("reference", "int-emulation")
+        # flow_ingest spans BOTH axes: every float backend (fused builders)
+        # plus int-emulation (the int plan rides the reference structure)
+        assert dispatch.backends("flow_ingest") == (
+            "pallas-tpu", "pallas-interpret", "reference", "int-emulation"
+        )
         for family in dispatch.families():
             for backend in dispatch.backends(family):
                 assert callable(dispatch.resolve(family, backend))
@@ -250,6 +256,73 @@ class TestAutotune:
         assert rows and rows[0][1] <= rows[-1][1]  # fastest-first
         got = autotune.get_tiles("chimera_attention", dims, "reference", cache=cache)
         assert got == rows[0][0]  # subsequent queries return the winner
+
+    def test_cache_discards_pre_envelope_files(self, tmp_path):
+        """Caches written before the versioned envelope (pre-flow_ingest)
+        carry bare entry dicts; their keys predate the current dim schema,
+        so a fresh load must treat them as empty rather than serve stale
+        tiles under a colliding key."""
+        path = tmp_path / "autotune.json"
+        stale_key = autotune.cache_key(
+            "window_attention", "pallas-interpret",
+            {"T": 256, "d": 32, "dv": 32, "window": 128}, jnp.float32,
+        )
+        path.write_text(json.dumps(
+            {stale_key: {"tiles": {"blk_q": 8, "blk_k": 8}, "us": 1.0}}
+        ))
+        c = autotune.AutotuneCache(str(path))
+        assert c.get(stale_key) is None  # discarded wholesale
+
+        c.put(stale_key, {"blk_q": 64, "blk_k": 64}, 2.0)
+        c.save()
+        raw = json.loads(path.read_text())
+        assert raw["__schema__"] == autotune.CACHE_SCHEMA
+        assert stale_key in raw["entries"]
+        c2 = autotune.AutotuneCache(str(path))
+        assert c2.get(stale_key) == {
+            "tiles": {"blk_q": 64, "blk_k": 64}, "us": 2.0
+        }
+
+    def test_cache_discards_mismatched_schema_envelope(self, tmp_path):
+        path = tmp_path / "autotune.json"
+        path.write_text(json.dumps({
+            "__schema__": autotune.CACHE_SCHEMA - 1,
+            "entries": {"k": {"tiles": {"lane_tile": 8}, "us": 1.0}},
+        }))
+        assert autotune.AutotuneCache(str(path)).get("k") is None
+
+    def test_cache_key_separates_backend_dtype_and_family_dims(self):
+        dims = {"lanes": 128, "d": 32, "w_words": 4, "rules": 64,
+                "n_classes": 8}
+        keys = {
+            autotune.cache_key("flow_ingest", b, d, t)
+            for b in ("pallas-tpu", "pallas-interpret")
+            for t in (jnp.float32, jnp.bfloat16)
+            for d in (dims, {**dims, "lanes": 64})
+        }
+        assert len(keys) == 8  # every axis lands in the key
+
+    def test_flow_ingest_candidates_respect_budget_and_lanes(self):
+        dims = {"lanes": 128, "d": 32, "w_words": 4, "rules": 64,
+                "n_classes": 8}
+        cands = autotune.candidate_tiles("flow_ingest", dims)
+        assert cands
+        for t in cands:
+            assert autotune.fits_vmem("flow_ingest", t, dims)
+            # a divisor of lanes tiles every pow2 launch width the engine
+            # emits (min_chunk_lanes .. lanes)
+            assert 128 % t["lane_tile"] == 0
+        tiles = autotune.heuristic_tiles("flow_ingest", dims)
+        assert tiles in cands
+        # monster dims blow the Eq. 11 budget at every tile -> no candidates
+        huge = {"lanes": 8, "d": 1 << 22, "w_words": 1 << 20,
+                "rules": 1 << 20, "n_classes": 8}
+        assert autotune.candidate_tiles("flow_ingest", huge) == []
+        assert autotune.heuristic_tiles("flow_ingest", huge) is None
+
+    def test_flow_ingest_builder_resolves_and_accepts_tiles(self):
+        for backend in dispatch.backends("flow_ingest"):
+            assert callable(dispatch.resolve("flow_ingest", backend))
 
 
 class TestEndToEndBackendSelection:

@@ -291,6 +291,56 @@ class TestSwapTables:
             eng.swap_tables(ruleset=grown)
 
 
+class TestDonationRollbackAudit:
+    """Regression for the donate_argnums audit (flow_engine.py): the jitted
+    steps donate the table-state argnums (2-6) but NOT ``rules`` (argnum 1),
+    and ``atomic_swap`` never donates — so the adaptive rollback recipe
+    (capture ``prev_rules``, install a candidate, observe an Eq. 18 t_cp
+    violation, re-install the captured pytree) must stay safe while ingest
+    keeps donating state buffers in between.  These tests interleave failing
+    installs + rollbacks with live ingest and require bit-equality with a
+    control engine that never swapped; a reuse-after-donation of the
+    captured rules would surface as a deleted-buffer error or corrupt
+    decisions."""
+
+    OUT_KEYS = ("trust", "vetoed", "pred", "s_nn", "s_sym", "sig")
+
+    def _interleave(self, classifier, **fkw):
+        ccfg, params = classifier
+        base = C.default_rules(ccfg, jnp.asarray([400, 401, 402, 403]))
+        dead = C.default_rules(ccfg, jnp.asarray([500, 501, 502, 503]))
+        # a t_cp epoch no host can meet: every install violates Eq. 18
+        eng = _engine(classifier, rules=base, t_cp_s=1e-12, **fkw)
+        ctl = _engine(classifier, rules=base, **fkw)
+
+        rng = np.random.default_rng(3)
+        for i in range(6):
+            fids = rng.integers(0, 6, (12,))
+            toks = rng.integers(0, 512, (12, 8)).astype(np.int32)
+            a = eng.ingest(fids, toks)
+            b = ctl.ingest(fids.copy(), toks.copy())
+            for k in self.OUT_KEYS:
+                np.testing.assert_array_equal(
+                    a[k], b[k], err_msg=f"tick {i} {k}"
+                )
+            prev = eng.rules  # the AdaptiveLoop rollback capture
+            rec = eng.swap_tables(ruleset=dead)
+            assert not rec.churn_ok  # the install DID violate t_cp
+            eng.swap_tables(ruleset=prev)  # reuse-after-donation bait
+        # captured-rules buffers were never donated: per-flow state and
+        # scores agree exactly after six failed-install/rollback cycles
+        for f in sorted(int(x) for x in eng.table.slot_of):
+            assert eng.flow_scores(f) == ctl.flow_scores(f), f
+
+    def test_failing_install_rollback_interleaved_with_ingest(self, classifier):
+        self._interleave(classifier)
+
+    def test_rollback_interleaved_with_fused_ingest(self, classifier):
+        # same audit against the fused single-launch path: _jit_fused
+        # donates the same state argnums (2-6)
+        self._interleave(classifier, fused=True)
+
+
 @pytest.mark.slow
 class TestTrafficScale:
     def test_10k_interleaved_flows_bounded_table(self, classifier):

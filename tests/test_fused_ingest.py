@@ -1,0 +1,266 @@
+"""Fused-ingest differential tier: the single-launch ``flow_ingest`` path
+must be bit-identical to the per-round engine (DESIGN.md §15).
+
+The fused builder scans the exact :func:`make_flow_step` body on device, so
+equality is by construction for the reference backend; these replays pin it
+empirically — scores, veto bits, S = 1.0 pinning, the eviction sequence —
+for FlowScenario and a 3-phase DriftScenario, in both the no-eviction and
+table-pressure regimes, on the reference and pallas-interpret backends
+(the latter differentially validates the Pallas score-stage kernel).
+
+State comparisons cover rows ``[:capacity]`` only: the scratch slot (index
+== capacity) absorbs padding lanes, and the two paths pad differently — a
+real lane never reads it, so its value is unspecified.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compile import compile_program
+from repro.data.pipeline import DriftPhase, DriftScenario, FlowScenario
+from repro.serve.flow_engine import (
+    FlowEngine,
+    FlowEngineConfig,
+    pack_width_groups,
+)
+from repro.serve.ingest_pipeline import AsyncIngestPipeline
+from repro.train import classifier as C
+
+KEY = jax.random.PRNGKey(0)
+OUT_KEYS = ("trust", "vetoed", "pred", "s_nn", "s_sym", "sig")
+BACKENDS = ("reference", "pallas-interpret")
+DRIFT_PHASES = (
+    DriftPhase(kind="protocol-mix", batches=3, anomaly_rate=0.3),
+    DriftPhase(kind="rule-violating", batches=4, anomaly_rate=0.6,
+               sig_rotation=1),
+    DriftPhase(kind="heavy-churn", batches=3, anomaly_rate=0.3,
+               sig_rotation=1),
+)
+
+
+@pytest.fixture(scope="module")
+def classifier(tiny_classifier_cfg):
+    params, _ = C.init_classifier(tiny_classifier_cfg, KEY)
+    return tiny_classifier_cfg, params
+
+
+def flow_scenario():
+    return FlowScenario(kind="mix", vocab_size=512, pkt_len=8,
+                        packets_per_batch=48, seed=11)
+
+
+def drift_scenario():
+    return DriftScenario(phases=DRIFT_PHASES, pkt_len=8,
+                         packets_per_batch=32, seed=11)
+
+
+def _program(classifier, backend):
+    ccfg, params = classifier
+    sc = flow_scenario()
+    return compile_program(
+        ccfg, params,
+        rules=lambda c: C.default_rules(c, jnp.asarray(sc.anomaly_signature)),
+        backend=backend,
+    )
+
+
+def _pair(classifier, backend, capacity):
+    """(legacy, fused) engines deployed from ONE compiled program."""
+    program = _program(classifier, backend)
+    legacy = FlowEngine.from_program(
+        program, FlowEngineConfig(capacity=capacity, lanes=16)
+    )
+    fused = FlowEngine.from_program(
+        program, FlowEngineConfig(capacity=capacity, lanes=16, fused=True)
+    )
+    return legacy, fused
+
+
+def _assert_replay_identical(legacy, fused, make_scenario, batches,
+                             sinks=None):
+    s1, s2 = make_scenario(), make_scenario()
+    sink_legacy, sink_fused = sinks or (legacy, fused)
+    for i in range(batches):
+        b1, b2 = s1.next_batch(), s2.next_batch()
+        a = sink_legacy.ingest(b1["flow_ids"], b1["tokens"])
+        b = sink_fused.ingest(b2["flow_ids"], b2["tokens"])
+        for k in OUT_KEYS:
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"batch {i} {k}")
+        # S = 1.0 pinning: exactly the vetoed packets score trust 1.0
+        np.testing.assert_array_equal(b["trust"] == 1.0, b["vetoed"])
+    # identical eviction sequence -> identical directories and stats
+    assert fused.table.slot_of == legacy.table.slot_of
+    assert fused.stats.flows_created == legacy.stats.flows_created
+    assert fused.stats.flows_evicted_lru == legacy.stats.flows_evicted_lru
+    assert fused.stats.flows_evicted_idle == legacy.stats.flows_evicted_idle
+    # on-device table rows [:capacity] are bit-equal (scratch row excluded)
+    cap = legacy.fcfg.capacity
+    for name in ("positions", "sig", "hidden_sum", "vetoed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(legacy, name))[:cap],
+            np.asarray(getattr(fused, name))[:cap],
+            err_msg=name,
+        )
+
+
+class TestPackWidthGroups:
+    def test_preserves_round_order_and_covers_all_packets(self):
+        slots = np.array([1, 2, 3, 1, 2, 1, 1, 1], np.int32)
+        groups = pack_width_groups(slots, lanes=4, min_lanes=2)
+        seen = [i for _, chunks in groups for ch in chunks for i in ch]
+        assert sorted(seen) == list(range(len(slots)))
+        # same-slot packets appear in arrival order across the flat sequence
+        pos = {i: n for n, i in enumerate(seen)}
+        for s in set(slots.tolist()):
+            idx = [i for i, x in enumerate(slots) if x == s]
+            assert [pos[i] for i in idx] == sorted(pos[i] for i in idx)
+
+    def test_width_is_pow2_bucketed_and_clamped(self):
+        slots = np.arange(10, dtype=np.int32)  # one round of 10 distinct
+        ((w, chunks),) = pack_width_groups(slots, lanes=16, min_lanes=4)
+        assert w == 16 and len(chunks) == 1  # next_pow2(10) = 16
+        ((w, chunks),) = pack_width_groups(slots[:3], lanes=16, min_lanes=4)
+        assert w == 4  # floored at min_lanes
+        # 10 distinct slots at lanes=8: one full-width chunk + a 2-packet
+        # remainder that buckets down to width 4, NOT merged into width 8
+        groups = pack_width_groups(slots, lanes=8, min_lanes=4)
+        assert [(w, [len(ch) for ch in c]) for w, c in groups] == [
+            (8, [8]), (4, [2]),
+        ]
+
+    def test_consecutive_same_width_chunks_share_a_group(self):
+        # two rounds, both with >half-lanes occupancy -> same width, one group
+        slots = np.array([1, 2, 3, 4, 1, 2, 3], np.int32)
+        groups = pack_width_groups(slots, lanes=4, min_lanes=2)
+        assert [w for w, _ in groups] == [4]
+        assert [len(chunks) for _, chunks in groups] == [2]
+
+
+class TestFusedDifferential:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_flow_scenario_no_eviction(self, classifier, backend):
+        legacy, fused = _pair(classifier, backend, capacity=512)
+        _assert_replay_identical(legacy, fused, flow_scenario, batches=12)
+        assert legacy.stats.flows_evicted == 0  # regime check
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_drift_scenario_three_phase(self, classifier, backend):
+        legacy, fused = _pair(classifier, backend, capacity=512)
+        n = sum(p.batches for p in DRIFT_PHASES)
+        _assert_replay_identical(legacy, fused, drift_scenario, batches=n)
+
+    def test_flow_scenario_under_table_pressure(self, classifier):
+        # capacity far below the scenario's flow population: LRU eviction
+        # fires constantly and the eviction sequences must still agree
+        legacy, fused = _pair(classifier, "reference", capacity=24)
+        _assert_replay_identical(legacy, fused, flow_scenario, batches=12)
+        assert fused.stats.flows_evicted > 0  # regime check
+
+    def test_drift_pressure_with_idle_timeout(self, classifier):
+        program = _program(classifier, "reference")
+        fcfg = dict(capacity=24, lanes=16, idle_timeout=2)
+        legacy = FlowEngine.from_program(program, FlowEngineConfig(**fcfg))
+        fused = FlowEngine.from_program(
+            program, FlowEngineConfig(fused=True, **fcfg)
+        )
+        n = sum(p.batches for p in DRIFT_PHASES)
+        _assert_replay_identical(legacy, fused, drift_scenario, batches=n)
+
+
+class TestFusedDispatchShape:
+    def test_trace_count_is_bounded_by_width_buckets(self, classifier):
+        """The pow2 width buckets + chunk-axis floor bound the jit cache:
+        replaying many differently-shaped batches must trace at most one
+        shape per pow2 width (plus chunk-bucket escalations), never one
+        per (round-count, occupancy) pair."""
+        program = _program(classifier, "reference")
+        eng = FlowEngine.from_program(
+            program, FlowEngineConfig(capacity=128, lanes=16, fused=True)
+        )
+        n_widths = eng.warm_fused(pkt_len=8)
+        assert n_widths == 2  # widths {8, 16} for lanes=16
+        assert eng._jit_fused._cache_size() == n_widths
+
+        def replay_cycle(e):
+            sc = flow_scenario()
+            for _ in range(10):
+                b = sc.next_batch()
+                e.ingest(b["flow_ids"], b["tokens"])
+
+        replay_cycle(eng)
+        traced = eng._jit_fused._cache_size()
+        # <= one entry per (width, pow2 chunk-bucket) pair, never one per
+        # concrete (round-count, occupancy) shape
+        assert traced <= n_widths * 4
+        replay_cycle(eng)  # identical stream -> zero new traces
+        assert eng._jit_fused._cache_size() == traced, "steady-state retrace"
+
+    def test_fused_rounds_not_more_launches_than_legacy(self, classifier):
+        legacy, fused = _pair(classifier, "reference", capacity=512)
+        sc1, sc2 = flow_scenario(), flow_scenario()
+        for _ in range(6):
+            b1, b2 = sc1.next_batch(), sc2.next_batch()
+            legacy.ingest(b1["flow_ids"], b1["tokens"])
+            fused.ingest(b2["flow_ids"], b2["tokens"])
+        # both count one "round" per chunk; the fused path packs the same
+        # chunks (width-bucketed) so the chunk count matches exactly
+        assert fused.stats.rounds == legacy.stats.rounds
+
+
+class TestAsyncIngestPipeline:
+    def test_pipelined_replay_is_bit_identical(self, classifier):
+        legacy, fused = _pair(classifier, "reference", capacity=512)
+        pipe = AsyncIngestPipeline(fused, depth=3)
+        s1, s2 = flow_scenario(), flow_scenario()
+        batches = []
+        for _ in range(9):
+            b1, b2 = s1.next_batch(), s2.next_batch()
+            batches.append(legacy.ingest(b1["flow_ids"], b1["tokens"]))
+            pipe.submit(b2["flow_ids"], b2["tokens"])
+        got = pipe.drain()
+        assert len(got) == len(batches)
+        for i, (a, b) in enumerate(zip(batches, got)):
+            np.testing.assert_array_equal(a["flow_ids"], b["flow_ids"])
+            for k in OUT_KEYS:
+                np.testing.assert_array_equal(a[k], b[k],
+                                              err_msg=f"batch {i} {k}")
+        assert pipe.in_flight == 0
+
+    def test_backpressure_bounds_in_flight(self, classifier):
+        _, fused = _pair(classifier, "reference", capacity=512)
+        pipe = AsyncIngestPipeline(fused, depth=2)
+        sc = flow_scenario()
+        for _ in range(7):
+            b = sc.next_batch()
+            pipe.submit(b["flow_ids"], b["tokens"])
+            assert pipe.in_flight <= 2
+        assert len(pipe.drain()) == 7
+
+    def test_sync_wrapper_matches_engine_ingest(self, classifier):
+        legacy, fused = _pair(classifier, "reference", capacity=512)
+        pipe = AsyncIngestPipeline(fused)
+        s1, s2 = flow_scenario(), flow_scenario()
+        for _ in range(4):
+            b1, b2 = s1.next_batch(), s2.next_batch()
+            a = legacy.ingest(b1["flow_ids"], b1["tokens"])
+            b = pipe.ingest(b2["flow_ids"], b2["tokens"])
+            for k in OUT_KEYS:
+                np.testing.assert_array_equal(a[k], b[k])
+
+    def test_requires_fused_engine(self, classifier):
+        legacy, _ = _pair(classifier, "reference", capacity=512)
+        with pytest.raises(ValueError, match="fused"):
+            AsyncIngestPipeline(legacy)
+
+
+class TestFusedIntEmulation:
+    def test_int_decisions_match_per_round_int_engine(self, classifier):
+        """fused=True composes with int-emulation: the int plan rides the
+        reference fused structure, and decisions stay bit-identical to the
+        per-round int engine."""
+        legacy, fused = _pair(classifier, "int-emulation", capacity=512)
+        assert fused._int_plan is not None
+        _assert_replay_identical(legacy, fused, flow_scenario, batches=8)

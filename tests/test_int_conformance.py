@@ -401,3 +401,96 @@ class TestGoldenIntHistory:
             assert g["pred"] == w["pred"], f"batch {i} pred"
             assert g["vetoed"] == w["vetoed"], f"batch {i} vetoed"
             assert g["trust_q"] == w["trust_q"], f"batch {i} trust_q"
+
+
+# ==========================================================================
+# sharded deployment: the lowered int tables replicate per shard
+# ==========================================================================
+
+needs_two_devices = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=2)",
+)
+
+
+@needs_two_devices
+class TestShardedIntEmulation:
+    """int-emulation over ShardedFlowEngine: the plan/tables are pure
+    functions of (ccfg, params, rules, horizon) — flow-independent — so
+    they deploy by replication while only the flow rows shard.  Decisions
+    must match a single-device int deploy bit-for-bit."""
+
+    def _engines(self, classifier, capacity=512):
+        from repro.serve.sharded_flow_engine import ShardedFlowEngine
+
+        ccfg, params = classifier
+        sc = flow_scenario()
+        program = compile_program(
+            ccfg, params,
+            rules=lambda c: C.default_rules(c, jnp.asarray(sc.anomaly_signature)),
+            backend="int-emulation",
+        )
+        single = FlowEngine.from_program(
+            program, FlowEngineConfig(capacity=capacity, lanes=16)
+        )
+        shard = ShardedFlowEngine.from_program(
+            program, FlowEngineConfig(capacity=capacity, lanes=16),
+            num_shards=2,
+        )
+        return single, shard
+
+    def test_two_shard_decisions_match_single_device(self, classifier):
+        single, shard = self._engines(classifier)
+        assert shard.backend == "int-emulation"
+        assert shard._int_plan is not None and shard._int_tables is not None
+        assert shard.hidden_sum.dtype == jnp.int32
+        s1, s2 = flow_scenario(), flow_scenario()
+        for i in range(N_BATCHES):
+            b1, b2 = s1.next_batch(), s2.next_batch()
+            f = single.ingest(b1["flow_ids"], b1["tokens"])
+            g = shard.ingest(b2["flow_ids"], b2["tokens"])
+            for k in DECISION_KEYS:
+                np.testing.assert_array_equal(
+                    f[k], g[k], err_msg=f"batch {i} {k}"
+                )
+            # S = 1.0 pinning holds shard-side too
+            np.testing.assert_array_equal(g["trust"] == 1.0, g["vetoed"])
+        assert shard.stats.flows_evicted == 0
+        # control-plane read path agrees flow-by-flow (dequantized scores)
+        for fid in list(single.table.slot_of)[:8]:
+            a, b = single.flow_scores(fid), shard.flow_scores(fid)
+            assert a == b, fid
+
+    def test_swap_requantizes_rule_weights_on_every_shard(self, classifier):
+        import dataclasses as dc
+
+        single, shard = self._engines(classifier)
+        s1, s2 = flow_scenario(), flow_scenario()
+        for _ in range(4):
+            b1, b2 = s1.next_batch(), s2.next_batch()
+            single.ingest(b1["flow_ids"], b1["tokens"])
+            shard.ingest(b2["flow_ids"], b2["tokens"])
+        new = dc.replace(
+            jax.device_get(single.rules),
+            weights=jax.device_get(single.rules).weights * 1.5,
+        )
+        old_rule_w = np.asarray(shard._int_tables["rule_w"])
+        single.swap_tables(ruleset=new)
+        shard.swap_tables(ruleset=new)
+        # the int score path reads the NEW quantized weight column
+        assert not np.array_equal(
+            np.asarray(shard._int_tables["rule_w"]), old_rule_w
+        )
+        np.testing.assert_array_equal(
+            np.asarray(shard._int_tables["rule_w"]),
+            np.asarray(single._int_tables["rule_w"]),
+        )
+        for i in range(4):
+            b1, b2 = s1.next_batch(), s2.next_batch()
+            f = single.ingest(b1["flow_ids"], b1["tokens"])
+            g = shard.ingest(b2["flow_ids"], b2["tokens"])
+            for k in DECISION_KEYS:
+                np.testing.assert_array_equal(
+                    f[k], g[k], err_msg=f"post-swap batch {i} {k}"
+                )
