@@ -224,8 +224,11 @@ def candidate_tiles(
         lanes = dims.get("lanes", 0)
         cands = []
         for lt in (8, 16) + _POW2:
-            # the engine launches pow2 widths from min_chunk_lanes..lanes;
-            # a divisor of lanes tiles every width it will ever see
+            # measured at the full-lanes shape only: a divisor of lanes keeps
+            # that launch exactly tiled.  The engine also launches smaller
+            # pow2 widths (down to min_chunk_lanes), where the kernel clamps
+            # the tile (lt = min(lane_tile, B)) and pads — correct, but those
+            # shapes are not separately swept
             if lanes and (lt > lanes or lanes % lt != 0):
                 continue
             for st in (8, 16) + _POW2:

@@ -539,7 +539,7 @@ class FlowEngine:
         # back to the reference builder (same fused structure, oracle
         # scores), so --fused composes with every backend.
         self._jit_fused = None
-        self._staging: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
+        self._staging: Dict[Tuple[int, int, int, int], Dict[str, np.ndarray]] = {}
         if fcfg.fused:
             from repro.kernels import autotune
             from repro.kernels.dispatch import resolve
@@ -587,10 +587,16 @@ class FlowEngine:
             return 0
         scratch = self.fcfg.capacity
         c_pad = max(_CHUNK_FLOOR, _next_pow2(max_chunks))
-        # pack_width_groups emits min(lanes, pow2): every pow2 below lanes,
-        # plus lanes itself when it is not a power of two
+        # pack_width_groups buckets a chunk to _next_pow2(max(len, min_lanes))
+        # clamped to lanes, so the widths traffic can produce are the pow2s
+        # from _next_pow2(min_chunk_lanes) up to lanes, plus lanes itself when
+        # it is not a power of two.  Start at the rounded-up pow2 so a
+        # non-pow2 min_chunk_lanes (e.g. 12) warms the real buckets (16,
+        # 32, ...) instead of widths that never occur.
         widths = []
-        w = max(self.fcfg.min_chunk_lanes, 1)
+        w = min(
+            self.fcfg.lanes, _next_pow2(max(self.fcfg.min_chunk_lanes, 1))
+        )
         while w < self.fcfg.lanes:
             widths.append(w)
             w *= 2
@@ -851,11 +857,26 @@ class FlowEngine:
         lanes, scratch = self.fcfg.lanes, self.fcfg.capacity
         pool = self._staging if staging is None else staging
         launches = []
+        # A buffer shape can recur non-consecutively within one batch: every
+        # arrival round larger than ``lanes`` emits a full-width group then a
+        # smaller tail, so the width sequence looks like [256, 64, 256, 64].
+        # Reusing one buffer for both same-shape groups would overwrite data
+        # an earlier launch's asynchronous host-to-device transfer may still
+        # be reading, so the pool key carries a per-dispatch occurrence index
+        # — each use gets its own buffer.  Across dispatches the same
+        # (shape, occurrence) sequence maps back to the same buffers, and
+        # finalize() (which materializes the launch outputs, hence runs after
+        # the input transfers) has completed before a ring slot's pool is
+        # reused, so cross-batch reuse stays race-free.
+        uses: Dict[Tuple[int, int, int], int] = {}
         for w, chunks in pack_width_groups(
             slots, lanes, self.fcfg.min_chunk_lanes
         ):
             c_pad = max(_CHUNK_FLOOR, _next_pow2(len(chunks)))
-            key = (w, c_pad, pkt_len)
+            shape = (w, c_pad, pkt_len)
+            occ = uses.get(shape, 0)
+            uses[shape] = occ + 1
+            key = (w, c_pad, pkt_len, occ)
             buf = pool.get(key)
             if buf is None:
                 buf = pool[key] = {

@@ -198,6 +198,27 @@ class TestFusedDispatchShape:
         replay_cycle(eng)  # identical stream -> zero new traces
         assert eng._jit_fused._cache_size() == traced, "steady-state retrace"
 
+    def test_warm_fused_non_pow2_min_chunk_lanes_matches_buckets(
+        self, classifier
+    ):
+        """pack_width_groups never emits a non-pow2 width below ``lanes``:
+        with min_chunk_lanes=12 the real buckets are {16, 32}, and warming
+        must trace exactly those (not 12/24, which never occur) so a stream
+        hitting every bucket adds zero steady-state traces."""
+        program = _program(classifier, "reference")
+        eng = FlowEngine.from_program(
+            program, FlowEngineConfig(
+                capacity=128, lanes=32, min_chunk_lanes=12, fused=True
+            )
+        )
+        assert eng.warm_fused(pkt_len=8) == 2  # widths {16, 32}
+        warmed = eng._jit_fused._cache_size()
+        # 40 distinct flows in one round -> chunks of 32 and 8 packets,
+        # bucketed to widths 32 and next_pow2(max(8, 12)) = 16
+        flow_ids = np.arange(40)
+        eng.ingest(flow_ids, np.ones((40, 8), np.int32))
+        assert eng._jit_fused._cache_size() == warmed, "mid-stream retrace"
+
     def test_fused_rounds_not_more_launches_than_legacy(self, classifier):
         legacy, fused = _pair(classifier, "reference", capacity=512)
         sc1, sc2 = flow_scenario(), flow_scenario()
@@ -208,6 +229,61 @@ class TestFusedDispatchShape:
         # both count one "round" per chunk; the fused path packs the same
         # chunks (width-bucketed) so the chunk count matches exactly
         assert fused.stats.rounds == legacy.stats.rounds
+
+
+class TestStagingBufferReuse:
+    def test_same_shape_groups_get_distinct_buffers_within_one_dispatch(
+        self, classifier
+    ):
+        """A buffer shape can recur non-consecutively in one batch (each
+        round bigger than ``lanes`` emits a full-width chunk then a tail,
+        giving width sequences like [4, 2, 4, 2]).  The second same-shape
+        group must NOT repack the numpy buffers an earlier launch's async
+        host-to-device transfer may still be reading: every use within a
+        dispatch gets its own occurrence-indexed buffer."""
+        program = _program(classifier, "reference")
+        eng = FlowEngine.from_program(
+            program, FlowEngineConfig(
+                capacity=64, lanes=4, min_chunk_lanes=2, fused=True
+            )
+        )
+        # 6 distinct flows x 2 packets -> two arrival rounds, each packing
+        # a full-width chunk (w=4) then a 2-packet tail (w=2)
+        flow_ids = np.tile(np.arange(6), 2)
+        tokens = np.ones((12, 8), np.int32)
+        slots, fresh = eng._resolve_slots(flow_ids)
+        staging = {}
+        eng._dispatch_fused(flow_ids, tokens, slots, fresh,
+                            staging=staging).finalize()
+        # four groups, two per shape -> occurrence indices {0, 1} and four
+        # physically distinct buffer sets
+        assert sorted(k[:3] for k in staging) == sorted(
+            [(2, 8, 8), (2, 8, 8), (4, 8, 8), (4, 8, 8)]
+        )
+        assert {k[3] for k in staging} == {0, 1}
+        for field in ("idx", "tok", "fr"):
+            assert len({id(buf[field]) for buf in staging.values()}) == 4
+
+    def test_recurring_width_batch_is_bit_identical_to_legacy(
+        self, classifier
+    ):
+        """End-to-end guard for the same hazard: repeated [full, tail]
+        width patterns through the fused path must still match the
+        per-round engine exactly."""
+        program = _program(classifier, "reference")
+        fcfg = dict(capacity=64, lanes=4, min_chunk_lanes=2)
+        legacy = FlowEngine.from_program(program, FlowEngineConfig(**fcfg))
+        fused = FlowEngine.from_program(
+            program, FlowEngineConfig(fused=True, **fcfg)
+        )
+        rng = np.random.default_rng(7)
+        for _ in range(4):
+            flow_ids = np.tile(np.arange(6), 3)  # 3 rounds of [w=4, w=2]
+            tokens = rng.integers(0, 512, (18, 8)).astype(np.int32)
+            a = legacy.ingest(flow_ids, tokens)
+            b = fused.ingest(flow_ids, tokens)
+            for k in OUT_KEYS:
+                np.testing.assert_array_equal(a[k], b[k], err_msg=k)
 
 
 class TestAsyncIngestPipeline:
