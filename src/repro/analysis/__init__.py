@@ -1,0 +1,56 @@
+"""Static dataplane-program verification (DESIGN.md §16).
+
+Chimera's trust story — predictable, auditable behavior inside the
+match-action pipeline — is only as strong as what can be *proven* about a
+compiled :class:`~repro.compile.program.DataplaneProgram` before a single
+packet flows.  This package is the static-analysis layer: every analysis
+runs over traced jaxprs, compiled rule tables, or jit caches — no
+execution required — and lands its findings as ``static-verification``
+entries in the program's :class:`~repro.compile.ledger.ResourceLedger`.
+
+Four analyses:
+
+* :mod:`repro.analysis.jaxpr_lint` — pluggable jaxpr visitor framework
+  (float ops in int-lowered paths, host callbacks in jitted hot paths,
+  donation safety, weak-type promotion hazards).
+* :mod:`repro.analysis.intervals` — integer interval abstract
+  interpretation over the lowered score jaxpr: propagates worst-case value
+  ranges per equation and statically proves no int32 overflow at the
+  declared Eq. 39 horizon, cross-checking the ledger's hand-derived
+  accumulator widths.
+* :mod:`repro.analysis.tcam_lint` — ternary rule-table analysis over
+  :class:`~repro.core.symbolic.RuleSet`: shadowed/redundant rules,
+  ambiguous overlaps, hard-veto reachability.
+* :mod:`repro.analysis.retrace_sentry` — trace-count auditor wrapping the
+  jitted entry points of the serving engines (the formalized version of
+  the scattered ``_cache_size`` test assertions).
+
+``python -m repro.analysis.gate`` runs the whole battery over every
+backend's gate-emitted program and emits a JSON verdict artifact for CI;
+:func:`repro.analysis.verify.verify_program` is the library entry point
+the compiler's verify pass calls.
+"""
+
+from repro.analysis.intervals import (  # noqa: F401
+    AnalysisError,
+    Interval,
+    IntervalReport,
+    SumBound,
+    analyze_intervals,
+    prove_no_overflow,
+    score_input_ranges,
+)
+from repro.analysis.jaxpr_lint import (  # noqa: F401
+    Finding,
+    JaxprLinter,
+    default_linter,
+    donation_safety,
+    float_ops_in_jaxpr,
+    host_callbacks_in_jaxpr,
+    lint_jaxpr,
+    walk_jaxpr,
+    weak_type_hazards,
+)
+from repro.analysis.retrace_sentry import RetraceError, RetraceSentry  # noqa: F401
+from repro.analysis.tcam_lint import TcamFinding, lint_ruleset  # noqa: F401
+from repro.analysis.verify import STAGE, verify_program  # noqa: F401

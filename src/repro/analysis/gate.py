@@ -1,0 +1,153 @@
+"""CI fast-lane static-verification gate.
+
+Compiles the smoke config for every kernel backend available on this
+host, runs the full static battery (:func:`repro.analysis.verify
+.verify_program`) over each gate-emitted :class:`DataplaneProgram`, audits
+the deployed engine's jitted hot path with the retrace sentry, and fires
+two *canary* checks proving the battery still has teeth (a constructed
+overflow must be caught; a constructed shadowed rule must be flagged — a
+gate that cannot fail verifies nothing).  Emits a JSON verdict artifact
+and exits nonzero on any error-severity finding:
+
+    PYTHONPATH=src python -m repro.analysis.gate [--out verdict.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List
+
+
+def _verify_backend(backend, ccfg, params, rules_fn, scenario) -> Dict:
+    import numpy as np
+
+    from repro.analysis.retrace_sentry import RetraceError, RetraceSentry
+    from repro.analysis.verify import verify_program
+    from repro.compile import compile_program
+    from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+
+    program = compile_program(
+        ccfg, params, rules=rules_fn, backend=backend, verify=False
+    )
+    entries = verify_program(program, strict=False)
+    rows = [e.as_dict() for e in entries]
+    errors = [e for e in entries if not e.ok]
+
+    # retrace audit of the deployed hot path: after one warmup tick, a
+    # same-shaped tick must not retrace the jitted step
+    retrace_ok, retrace_detail = True, "no mid-stream retrace after warmup"
+    engine = FlowEngine.from_program(
+        program, FlowEngineConfig(capacity=256, lanes=64)
+    )
+    sentry = RetraceSentry.for_engine(engine)
+    batch = scenario.next_batch()
+    engine.ingest(batch["flow_ids"], batch["tokens"])  # warmup trace
+    sentry.snapshot()
+    batch = scenario.next_batch()
+    try:
+        with sentry.expect_no_retrace():
+            engine.ingest(
+                np.asarray(batch["flow_ids"]), np.asarray(batch["tokens"])
+            )
+    except RetraceError as e:
+        retrace_ok, retrace_detail = False, str(e)
+
+    return {
+        "backend": program.backend,
+        "entries": rows,
+        "retrace": {"ok": retrace_ok, "detail": retrace_detail},
+        "ok": not errors and retrace_ok,
+    }
+
+
+def _canaries() -> List[Dict]:
+    """The battery must still catch known-bad constructions."""
+    import jax.numpy as jnp
+
+    from repro.analysis.intervals import AnalysisError, Interval, analyze_intervals
+    from repro.analysis.tcam_lint import lint_ruleset
+    from repro.core.symbolic import RuleSet
+
+    out: List[Dict] = []
+
+    # 1. a 2^30-scale int32 multiply must be proven overflowing
+    import jax
+
+    jx = jax.make_jaxpr(lambda x: x * x)(jax.ShapeDtypeStruct((2,), jnp.int32))
+    rep = analyze_intervals(jx, [Interval(-(1 << 30), 1 << 30)])
+    out.append({
+        "name": "interval-catches-overflow",
+        "ok": not rep.proves_no_overflow(),
+        "detail": f"{len(rep.overflows())} overflow eqn(s) flagged",
+    })
+
+    # 2. a hard rule buried under a broader soft rule must be flagged
+    rs = RuleSet(
+        values=jnp.asarray([[0b01], [0b11]], jnp.uint32),
+        masks=jnp.asarray([[0b01], [0b11]], jnp.uint32),
+        weights=jnp.zeros((2,), jnp.float32),
+        hard=jnp.asarray([False, True]),
+    )
+    findings = lint_ruleset(rs, achievable_bits=8)
+    shadowed = [f for f in findings if f.kind == "shadowed" and f.severity == "error"]
+    out.append({
+        "name": "tcam-catches-shadowed-veto",
+        "ok": bool(shadowed),
+        "detail": shadowed[0].message if shadowed else "NOT FLAGGED",
+    })
+    return out
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="analysis-verdict.json",
+                        help="JSON verdict artifact path")
+    args = parser.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.data.pipeline import FlowScenario
+    from repro.train import classifier as C
+
+    arch = dataclasses.replace(smoke_config("chimera-dataplane"), vocab_size=512)
+    ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256)
+    params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
+    scenario = FlowScenario(kind="mix", pkt_len=16, packets_per_batch=128, seed=0)
+
+    def rules_fn(c):
+        return C.default_rules(c, jnp.asarray(scenario.anomaly_signature))
+
+    backends = ["xla", "reference", "pallas-interpret", "int-emulation"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas-tpu")
+
+    verdict = {"backends": [], "canaries": _canaries()}
+    for backend in backends:
+        result = _verify_backend(backend, ccfg, params, rules_fn, scenario)
+        verdict["backends"].append(result)
+        status = "ok" if result["ok"] else "FAIL"
+        print(f"[{status}] backend={result['backend']}: "
+              f"{len(result['entries'])} static-verification entries, "
+              f"retrace {'ok' if result['retrace']['ok'] else 'FAIL'}")
+        for row in result["entries"]:
+            mark = "ok" if row["ok"] else "OVER"
+            print(f"    {row['resource']:26} used={row['used']:g} "
+                  f"budget={row['budget']:g} {mark}")
+    for c in verdict["canaries"]:
+        print(f"[{'ok' if c['ok'] else 'FAIL'}] canary {c['name']}: {c['detail']}")
+
+    verdict["ok"] = (all(b["ok"] for b in verdict["backends"])
+                     and all(c["ok"] for c in verdict["canaries"]))
+    with open(args.out, "w") as f:
+        json.dump(verdict, f, indent=2)
+    print(f"verdict {'ok' if verdict['ok'] else 'FAIL'} -> {args.out}")
+    return 0 if verdict["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+"""Retrace sentry: a trace-count auditor for jitted hot paths
+(DESIGN.md §16.4).
+
+A mid-stream retrace is the serving-path failure mode jit hides best: a
+shape or dtype wobble (a stray Python int, a non-pow2 staging width, a
+weak-type promotion) silently recompiles the step function, stalling the
+dataplane for whole milliseconds while packets queue.  The repo's tests
+have long asserted stability by poking ``jitted._cache_size()`` inline;
+this module formalizes that idiom into an API with named entry points,
+snapshots, and a context manager, so engines and tests share one
+vocabulary for "this region must not trace".
+
+Usage::
+
+    sentry = RetraceSentry.for_engine(engine)   # named jitted entries
+    engine.ingest(...)                          # warmup traces are fine
+    sentry.snapshot()                           # freeze the baseline
+    with sentry.expect_no_retrace():            # audited region
+        engine.ingest(...)
+    # or imperatively: sentry.assert_no_retrace()
+
+``RetraceError`` reports exactly which entry point retraced and by how
+much.  The sentry never touches jit internals beyond the cache size — it
+cannot perturb what it measures.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+_ENGINE_ATTRS = ("_jit_step", "_jit_fused", "_jit_summarize", "_jit_commit")
+
+
+class RetraceError(AssertionError):
+    """A jitted entry point retraced inside an audited region."""
+
+    def __init__(self, message: str, deltas: Dict[str, int]):
+        super().__init__(message)
+        self.deltas = deltas
+
+
+def _cache_size(fn) -> int:
+    return int(fn._cache_size())
+
+
+class RetraceSentry:
+    """Audits trace counts of named jitted callables."""
+
+    def __init__(self, targets: Dict[str, Callable]):
+        for name, fn in targets.items():
+            if not hasattr(fn, "_cache_size"):
+                raise TypeError(
+                    f"target {name!r} is not a jitted callable "
+                    f"(no _cache_size): {type(fn).__name__}"
+                )
+        self._targets = dict(targets)
+        self._baseline: Optional[Dict[str, int]] = None
+        self.snapshot()
+
+    # ------------------------------------------------------------------
+    # construction helpers
+    # ------------------------------------------------------------------
+    @classmethod
+    def for_engine(cls, engine, prefix: str = "") -> "RetraceSentry":
+        """Sentry over every jitted entry point an engine exposes.
+
+        Prefers the engine's :meth:`jit_entry_points` contract; falls back
+        to scanning the known ``_jit_*`` attributes.  An
+        :class:`~repro.serve.adaptive_loop.AdaptiveLoop` contributes its
+        inner :class:`~repro.serve.flow_engine.FlowEngine`'s entries too
+        (namespaced ``engine.<name>``)."""
+        targets: Dict[str, Callable] = {}
+        if hasattr(engine, "jit_entry_points"):
+            for name, fn in engine.jit_entry_points().items():
+                targets[prefix + name] = fn
+        else:
+            for attr in _ENGINE_ATTRS:
+                fn = getattr(engine, attr, None)
+                if fn is not None and hasattr(fn, "_cache_size"):
+                    targets[prefix + attr.removeprefix("_jit_")] = fn
+        if not targets:
+            raise ValueError(
+                f"{type(engine).__name__} exposes no jitted entry points"
+            )
+        return cls(targets)
+
+    # ------------------------------------------------------------------
+    # auditing
+    # ------------------------------------------------------------------
+    def counts(self) -> Dict[str, int]:
+        """Current trace count per entry point."""
+        return {name: _cache_size(fn) for name, fn in self._targets.items()}
+
+    def snapshot(self) -> Dict[str, int]:
+        """Freeze the baseline the next assertion compares against."""
+        self._baseline = self.counts()
+        return dict(self._baseline)
+
+    def deltas(self) -> Dict[str, int]:
+        """Traces since the last snapshot, per entry point."""
+        assert self._baseline is not None
+        now = self.counts()
+        return {name: now[name] - self._baseline[name] for name in now}
+
+    def assert_no_retrace(self) -> None:
+        """Raise :class:`RetraceError` if any entry traced since snapshot;
+        on success the baseline advances (repeated calls audit intervals)."""
+        grown = {n: d for n, d in self.deltas().items() if d > 0}
+        if grown:
+            rows = ", ".join(f"{n}: +{d}" for n, d in sorted(grown.items()))
+            raise RetraceError(
+                f"mid-stream retrace detected ({rows}) — jitted hot path "
+                f"saw a new shape/dtype signature inside an audited region",
+                grown,
+            )
+        self.snapshot()
+
+    def assert_total_traces(self, limit: int) -> None:
+        """Assert the *absolute* trace count across all entries ≤ limit
+        (warmup budget audits, e.g. pow2-bucketed fused dispatch)."""
+        total = sum(self.counts().values())
+        if total > limit:
+            raise RetraceError(
+                f"trace budget exceeded: {total} total traces > {limit} "
+                f"({self.counts()})",
+                self.counts(),
+            )
+
+    def expect_no_retrace(self) -> "_NoRetraceRegion":
+        """Context manager: snapshot on entry, assert on clean exit."""
+        return _NoRetraceRegion(self)
+
+
+class _NoRetraceRegion:
+    def __init__(self, sentry: RetraceSentry):
+        self._sentry = sentry
+
+    def __enter__(self) -> RetraceSentry:
+        self._sentry.snapshot()
+        return self._sentry
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self._sentry.assert_no_retrace()
+        return False

@@ -1,0 +1,134 @@
+"""Ternary rule-table lint (DESIGN.md §16.3).
+
+A :class:`~repro.core.symbolic.RuleSet` is the compiled TCAM tier of the
+symbolic path: M ternary ``(value, mask)`` entries over packed uint32
+signature words.  Silicon TCAMs are priority-encoded — entry order is the
+tiebreak — and real rule tables rot in well-known ways that no runtime
+test catches (the bad entry simply never fires).  This lint checks the
+table *as a set system*, using the exact ternary algebra from
+:func:`repro.core.symbolic.rule_covers` / :func:`rules_intersect`:
+
+* **shadowed** — an earlier (higher-priority) rule's match set contains a
+  later rule's: the later rule can never fire on its own.  An error when
+  the buried rule is a hard veto shadowed by a soft rule (in a
+  priority-encoded TCAM the veto is silently lost); a warning otherwise
+  (dead table space).
+* **ambiguous-overlap** — two rules of *different tiers* (hard vs. soft)
+  intersect with neither covering the other: whether a signature in the
+  intersection vetoes depends on entry order, which the learned weights
+  never see.  Flagged so the order is an explicit decision, not an
+  accident.
+* **unreachable** — a rule demands a care bit set to 1 at a bit position
+  the signature extractor can never set (``packet_signature`` only
+  populates one bit per marker token, so bits ≥ ``vocab_size −
+  marker_base`` are constant 0).  A dead hard veto is an error — the
+  protection it claims does not exist.
+* **always-fires** — a *hard* rule with zero care bits matches every
+  packet: a permanent veto on all traffic.  (An all-don't-care *soft*
+  rule is the repo's legitimate null bias term and is not flagged.)
+
+Pure control-plane, O(M²·W) — rule tables are small by construction
+(Eq. 19 budgets them in bits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.symbolic import RuleSet, rule_covers, rules_intersect
+
+ERROR = "error"
+WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class TcamFinding:
+    kind: str  # shadowed | ambiguous-overlap | unreachable | always-fires
+    severity: str  # error | warning
+    rule: int  # index of the offending rule
+    other: Optional[int]  # the counterpart rule for pairwise findings
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.severity}] {self.kind}: {self.message}"
+
+
+def _tier(hard: bool) -> str:
+    return "hard" if hard else "soft"
+
+
+def lint_ruleset(
+    rules: RuleSet, *, achievable_bits: Optional[int] = None
+) -> List[TcamFinding]:
+    """Lint one compiled rule table.
+
+    ``achievable_bits``: number of low signature bits the extractor can
+    actually set (``vocab_size − marker_base`` for the marker-presence
+    layout).  ``None`` skips reachability (table audited in isolation).
+    """
+    values = np.asarray(rules.values, dtype=np.uint32)
+    masks = np.asarray(rules.masks, dtype=np.uint32)
+    hard = np.asarray(rules.hard, dtype=bool)
+    m, w = values.shape
+    findings: List[TcamFinding] = []
+
+    # per-rule checks -------------------------------------------------------
+    for i in range(m):
+        if hard[i] and not masks[i].any():
+            findings.append(TcamFinding(
+                "always-fires", ERROR, i, None,
+                f"hard rule {i} has no care bits — it vetoes every packet",
+            ))
+        if achievable_bits is not None:
+            # care bits demanding 1 beyond what the extractor can set
+            demand = values[i] & masks[i]
+            reach = np.zeros(w, dtype=np.uint32)
+            full, rem = divmod(max(achievable_bits, 0), 32)
+            reach[:min(full, w)] = 0xFFFFFFFF
+            if full < w and rem:
+                reach[full] = (1 << rem) - 1
+            dead = demand & ~reach
+            if dead.any():
+                bits = [
+                    32 * wi + b
+                    for wi in range(w)
+                    for b in range(32)
+                    if (int(dead[wi]) >> b) & 1
+                ]
+                sev = ERROR if hard[i] else WARNING
+                findings.append(TcamFinding(
+                    "unreachable", sev, i, None,
+                    f"{_tier(hard[i])} rule {i} demands signature bit(s) "
+                    f"{bits} the extractor never sets (achievable bits: "
+                    f"{achievable_bits}) — the rule can never fire",
+                ))
+
+    # pairwise checks -------------------------------------------------------
+    for i in range(m):
+        for j in range(i + 1, m):
+            i_covers_j = rule_covers(values[i], masks[i], values[j], masks[j])
+            j_covers_i = rule_covers(values[j], masks[j], values[i], masks[i])
+            if i_covers_j:
+                sev = ERROR if hard[j] and not hard[i] else WARNING
+                findings.append(TcamFinding(
+                    "shadowed", sev, j, i,
+                    f"{_tier(hard[j])} rule {j} is shadowed by earlier "
+                    f"{_tier(hard[i])} rule {i} (its match set is contained"
+                    f" in rule {i}'s) — it never fires first",
+                ))
+            elif not j_covers_i and hard[i] != hard[j]:
+                if rules_intersect(values[i], masks[i], values[j], masks[j]):
+                    findings.append(TcamFinding(
+                        "ambiguous-overlap", WARNING, j, i,
+                        f"hard/soft rules {i} and {j} partially overlap "
+                        f"with neither covering the other — veto behavior "
+                        f"in the intersection depends on entry order",
+                    ))
+    return findings
+
+
+def errors(findings: List[TcamFinding]) -> List[TcamFinding]:
+    return [f for f in findings if f.severity == ERROR]

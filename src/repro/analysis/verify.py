@@ -1,0 +1,215 @@
+"""The compiler's static-verification pass (DESIGN.md §16).
+
+:func:`verify_program` is the library entry point: given an assembled
+:class:`~repro.compile.program.DataplaneProgram` it runs every applicable
+static analysis and returns the findings as ``static-verification``
+:class:`~repro.compile.ledger.StageEntry` rows — the same audit currency
+as every other compiler pass, so verification results ship inside the
+program and survive save/load.
+
+What runs where:
+
+* **every backend** — TCAM lint over the packed rule table (shadowing,
+  ambiguous hard/soft overlaps, reachability against the marker-signature
+  layout); jaxpr lint of the deployed streaming-score path for host
+  callbacks (a ``pure_callback`` in the hot path is a silent host
+  round-trip per tick) and weak-type promotion hazards.
+* **int-emulation** — additionally: float-op lint over the lowered
+  integer score jaxpr, and the interval-analysis overflow proof
+  (:func:`repro.analysis.intervals.prove_no_overflow`) at the program's
+  declared Eq. 39 horizon, cross-checked against the hand-derived
+  ``int-lowering`` ledger widths.
+
+Severity model: warnings become always-ok ledger rows (recorded, never
+fatal); errors become over-budget rows (``budget=0``).  With ``strict``
+(the compile-time default) an error additionally raises
+:class:`~repro.analysis.intervals.AnalysisError` — *louder* than
+:class:`~repro.compile.ledger.BudgetError`, and pointing at the analysis
+rather than a budget line.  ``strict=False`` records everything and lets
+the caller (the gate, a test) decide.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import tcam_lint as T
+from repro.analysis.intervals import AnalysisError, prove_no_overflow
+from repro.analysis.jaxpr_lint import (
+    float_ops_in_jaxpr,
+    host_callbacks_in_jaxpr,
+    weak_type_hazards,
+)
+from repro.compile.ledger import StageEntry
+
+STAGE = "static-verification"
+
+
+def _entry(resource: str, used: float, budget: float, detail: str) -> StageEntry:
+    return StageEntry(stage=STAGE, resource=resource, used=float(used),
+                      budget=float(budget), detail=detail)
+
+
+def _clip(msgs: List[str], n: int = 3) -> str:
+    shown = "; ".join(str(m) for m in msgs[:n])
+    more = len(msgs) - n
+    return shown + (f"; (+{more} more)" if more > 0 else "")
+
+
+def _score_path_jaxpr(ccfg, params, rules, batch: int):
+    """Trace the deployed float streaming-score path (nothing executes)."""
+    from repro.train.classifier import streaming_scores
+
+    d, w = ccfg.arch.d_model, ccfg.sig_words
+    sds = jax.ShapeDtypeStruct
+    return jax.make_jaxpr(
+        lambda pooled, sig, sticky: streaming_scores(
+            ccfg, params, rules, pooled, sig, sticky
+        )
+    )(
+        sds((batch, d), jnp.float32),
+        sds((batch, w), jnp.uint32),
+        sds((batch,), jnp.bool_),
+    )
+
+
+def verify_program(
+    program,
+    *,
+    int_cfg=None,
+    batch: int = 4,
+    strict: bool = True,
+) -> List[StageEntry]:
+    """Run the static battery over a compiled program; return ledger rows.
+
+    With ``strict`` (default) any error-severity finding raises
+    :class:`AnalysisError` naming the analysis; the returned rows are
+    attached to the exception's ``report`` so the audit is never lost.
+    """
+    entries: List[StageEntry] = []
+    fatal: List[str] = []
+
+    # -- TCAM rule-table lint (all backends) ---------------------------
+    achievable = max(program.ccfg.arch.vocab_size - program.ccfg.marker_base, 0)
+    findings = T.lint_ruleset(program.rules, achievable_bits=achievable)
+    errs = [f for f in findings if f.severity == T.ERROR]
+    warns = [f for f in findings if f.severity == T.WARNING]
+    entries.append(_entry(
+        "tcam-lint-errors", len(errs), 0,
+        _clip([f.message for f in errs]) if errs
+        else f"{program.rules.n_rules} rules, no shadowing/reachability errors",
+    ))
+    entries.append(_entry(
+        "tcam-lint-warnings", len(warns), len(warns),
+        _clip([f.message for f in warns]) if warns else "none",
+    ))
+    if errs:
+        fatal.append(f"tcam_lint: {_clip([f.message for f in errs])}")
+
+    # -- hot-path jaxpr lint (all backends with a trained head) --------
+    # params=None is the budget-audit-only compile mode: there is no score
+    # path to trace, so record the skip instead of silently passing
+    if program.params is None:
+        entries.append(_entry(
+            "hot-path-lint-skipped", 0, 0,
+            "params=None (budget-audit-only compile); score path not traced",
+        ))
+    else:
+        score_jx = _score_path_jaxpr(
+            program.ccfg, program.params, program.rules, batch
+        )
+        callbacks = host_callbacks_in_jaxpr(score_jx)
+        entries.append(_entry(
+            "hot-path-host-callbacks", len(callbacks), 0,
+            _clip([f.message for f in callbacks]) if callbacks
+            else "score path is callback-free",
+        ))
+        if callbacks:
+            fatal.append(f"host callbacks in score path: "
+                         f"{_clip([f.message for f in callbacks])}")
+        weak = weak_type_hazards(score_jx)
+        entries.append(_entry(
+            "hot-path-weak-types", len(weak), len(weak),
+            _clip([f.message for f in weak]) if weak else "none",
+        ))
+
+    # -- integer path: float lint + interval overflow proof ------------
+    if program.backend == "int-emulation" and program.params is not None:
+        from repro.compile.int_lowering import (
+            ALU_BITS,
+            IntLoweringConfig,
+            lower_scores,
+            score_jaxpr,
+        )
+
+        cfg = int_cfg if int_cfg is not None else IntLoweringConfig()
+        plan, tables, _ = lower_scores(
+            program.ccfg, program.params, program.rules,
+            cfg=cfg, horizon=program.horizon,
+        )
+        int_jx = score_jaxpr(
+            plan, tables, program.rules, batch, program.ccfg.arch.d_model
+        )
+        float_ops = float_ops_in_jaxpr(int_jx)
+        # the f32 HL-MRF weights ride along as an (unused) input; only
+        # *operations* on inexact dtypes violate the integer contract
+        entries.append(_entry(
+            "int-path-float-ops", len(float_ops), 0,
+            _clip(float_ops) if float_ops else "lowered score jaxpr is integer-only",
+        ))
+        if float_ops:
+            fatal.append(f"float ops in int-lowered path: {_clip(float_ops)}")
+
+        hand = [
+            e for e in program.ledger.entries
+            if e.stage == "int-lowering" and e.resource.endswith("-bits")
+            and e.resource != "feature-frac-bits"
+        ]
+        hand_max = max((int(e.used) for e in hand), default=0)
+        try:
+            report = prove_no_overflow(
+                plan, tables, program.rules,
+                horizon=program.horizon, batch=batch,
+                d_model=program.ccfg.arch.d_model,
+                ledger_entries=program.ledger.entries,
+            )
+            entries.append(_entry(
+                "int32-overflow-proof", report.max_signed_bits, ALU_BITS,
+                f"interval proof over {len(report.bounds)} eqns at horizon "
+                f"{program.horizon}: max {report.max_signed_bits}-bit signed"
+                f"; hand-derived ledger max {hand_max}-bit",
+            ))
+        except AnalysisError as e:
+            need = (e.report.max_signed_bits
+                    if e.report is not None else ALU_BITS + 1)
+            entries.append(_entry(
+                "int32-overflow-proof", need, ALU_BITS, str(e)
+            ))
+            fatal.append(str(e))
+
+    if strict and fatal:
+        err = AnalysisError(
+            "static verification failed: " + " | ".join(fatal),
+            report=entries,
+        )
+        raise err
+    return entries
+
+
+def verify_ruleset(rules, ccfg=None) -> List[StageEntry]:
+    """Standalone TCAM lint → ledger rows (delta audits, the CI gate)."""
+    achievable: Optional[int] = None
+    if ccfg is not None:
+        achievable = max(ccfg.arch.vocab_size - ccfg.marker_base, 0)
+    findings = T.lint_ruleset(rules, achievable_bits=achievable)
+    errs = [f for f in findings if f.severity == T.ERROR]
+    warns = [f for f in findings if f.severity == T.WARNING]
+    return [
+        _entry("tcam-lint-errors", len(errs), 0,
+               _clip([f.message for f in errs]) if errs else "clean"),
+        _entry("tcam-lint-warnings", len(warns), len(warns),
+               _clip([f.message for f in warns]) if warns else "none"),
+    ]

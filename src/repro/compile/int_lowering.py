@@ -498,37 +498,31 @@ def score_jaxpr(plan: IntScorePlan, tables, rules: symbolic.RuleSet,
 
 
 def _walk_jaxpr(jaxpr, visit):
-    from jax.extend import core as jex_core
+    """Back-compat shim: the jaxpr walker was promoted to
+    :func:`repro.analysis.jaxpr_lint.walk_jaxpr` (which also recurses into
+    dict-valued and deeply nested container params).  This adapter keeps
+    the historical ``visit(prim_name, aval)`` callback contract.
 
-    for eqn in jaxpr.eqns:
+    Lazy import: ``repro.analysis`` imports compile-side modules, so a
+    module-level import here would cycle during ``repro.compile`` init."""
+    from repro.analysis.jaxpr_lint import walk_jaxpr
+
+    def on_eqn(eqn, path):
         for v in list(eqn.invars) + list(eqn.outvars):
             aval = getattr(v, "aval", None)
             if aval is not None and hasattr(aval, "dtype"):
                 visit(eqn.primitive.name, aval)
-        for p in eqn.params.values():
-            subs = p if isinstance(p, (tuple, list)) else (p,)
-            for s in subs:
-                if isinstance(s, jex_core.ClosedJaxpr):
-                    _walk_jaxpr(s.jaxpr, visit)
-                elif isinstance(s, jex_core.Jaxpr):
-                    _walk_jaxpr(s, visit)
+
+    walk_jaxpr(jaxpr, on_eqn)
 
 
 def float_ops_in_jaxpr(closed_jaxpr) -> List[str]:
-    """Names of primitives touching any inexact (float/complex) operand or
-    result anywhere in the (recursively walked) jaxpr."""
-    found: List[str] = []
+    """Back-compat re-export of
+    :func:`repro.analysis.jaxpr_lint.float_ops_in_jaxpr` (the promoted
+    implementation additionally labels inexact *Literal* operands)."""
+    from repro.analysis.jaxpr_lint import float_ops_in_jaxpr as _impl
 
-    def visit(prim: str, aval) -> None:
-        if jnp.issubdtype(aval.dtype, jnp.inexact):
-            found.append(f"{prim}[{aval.dtype}]")
-
-    _walk_jaxpr(closed_jaxpr.jaxpr, visit)
-    for v in closed_jaxpr.jaxpr.constvars:
-        aval = getattr(v, "aval", None)
-        if aval is not None and jnp.issubdtype(aval.dtype, jnp.inexact):
-            found.append(f"constvar[{aval.dtype}]")
-    return found
+    return _impl(closed_jaxpr)
 
 
 def assert_integer_jaxpr(plan: IntScorePlan, tables, rules: symbolic.RuleSet,

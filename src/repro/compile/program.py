@@ -203,6 +203,7 @@ def compile_program(
     waivers: Tuple[str, ...] = (),
     tpu=DEFAULT_TPU,
     int_cfg=None,
+    verify: bool = True,
 ) -> DataplaneProgram:
     """Lower (config, params, rules) into a deployable DataplaneProgram.
 
@@ -214,6 +215,15 @@ def compile_program(
     Raises :class:`BudgetError` naming the offending stage when any pass
     exceeds ``spec``, unless that stage is listed in ``waivers`` (the
     violation is then recorded in the ledger instead).
+
+    ``verify`` (on by default) runs the static-verification battery
+    (:func:`repro.analysis.verify.verify_program`) as a final pass: TCAM
+    rule-table lint, hot-path jaxpr lint and — for int-emulation — the
+    interval-analysis int32 overflow proof at ``horizon``.  Findings land
+    as ``static-verification`` ledger entries; error-severity findings
+    raise :class:`repro.analysis.AnalysisError` unless the
+    ``"static-verification"`` stage is waived.  Pass ``verify=False`` to
+    opt out (the entries are then simply absent from the ledger).
     """
     ledger = ResourceLedger()
 
@@ -265,10 +275,7 @@ def compile_program(
     ledger.extend(entries)
     ledger.report = report
 
-    ledger.apply_waivers(tuple(waivers))
-    ledger.raise_if_over()
-
-    return DataplaneProgram(
+    program = DataplaneProgram(
         ccfg=ccfg,
         params=params,
         rules=rules,
@@ -282,6 +289,32 @@ def compile_program(
         ledger=ledger,
         spec=spec,
     )
+
+    # pass 6 — static verification (opt-out).  Findings are recorded as
+    # ledger rows either way; error-severity findings fail the compile
+    # louder than a budget line (AnalysisError) unless the stage is waived.
+    if verify:
+        from repro.analysis.verify import STAGE as VERIFY_STAGE
+        from repro.analysis.verify import verify_program
+
+        ledger.extend(verify_program(program, int_cfg=int_cfg, strict=False))
+        ledger.apply_waivers(tuple(waivers))
+        bad = [e for e in ledger.violations() if e.stage == VERIFY_STAGE]
+        if bad:
+            from repro.analysis.intervals import AnalysisError
+
+            lines = "; ".join(f"{e.resource}: {e.detail}" for e in bad)
+            raise AnalysisError(
+                f"static verification failed — {lines}. Pass "
+                f"waivers=('static-verification',) to record-and-accept, "
+                f"or verify=False to skip the pass.",
+                report=ledger,
+            )
+    else:
+        ledger.apply_waivers(tuple(waivers))
+    ledger.raise_if_over()
+
+    return program
 
 
 def compile_delta(

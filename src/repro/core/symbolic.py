@@ -24,6 +24,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quantization import FixedPointSpec, dequantize, quantize
 
@@ -77,6 +78,33 @@ def hard_hit(hits: jax.Array, rules: RuleSet) -> jax.Array:
 def soft_score(hits: jax.Array, rules: RuleSet) -> jax.Array:
     """s_sym = Σ_q W_q · hit_q — the compiled-table gather at line rate."""
     return jnp.sum(hits.astype(jnp.float32) * rules.weights, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Ternary set algebra — control-plane helpers for the TCAM lint
+# --------------------------------------------------------------------------
+
+def rule_covers(
+    value_i: jax.Array, mask_i: jax.Array, value_j: jax.Array, mask_j: jax.Array
+) -> bool:
+    """Does rule *i*'s match set contain rule *j*'s (match(j) ⊆ match(i))?
+
+    Exactly when every care bit of i is also a care bit of j (i demands
+    nothing j leaves free) and the two values agree on i's care bits.
+    Word-wise over packed uint32 signatures; pure control-plane."""
+    vi, mi = np.asarray(value_i), np.asarray(mask_i)
+    vj, mj = np.asarray(value_j), np.asarray(mask_j)
+    return bool(np.all(mi & ~mj == 0) and np.all((vi ^ vj) & mi == 0))
+
+
+def rules_intersect(
+    value_i: jax.Array, mask_i: jax.Array, value_j: jax.Array, mask_j: jax.Array
+) -> bool:
+    """Can some signature hit both rules?  Exactly when the values agree on
+    the shared care bits — don't-care bits can always be chosen to suit."""
+    vi, mi = np.asarray(value_i), np.asarray(mask_i)
+    vj, mj = np.asarray(value_j), np.asarray(mask_j)
+    return bool(np.all((vi ^ vj) & mi & mj == 0))
 
 
 # --------------------------------------------------------------------------

@@ -275,6 +275,17 @@ class AdaptiveLoop:
 
         self._jit_commit = jax.jit(_commit)
 
+    def jit_entry_points(self):
+        """Named jitted hot-path callables, for the retrace sentry: the
+        drift paths plus the inner engine's (namespaced ``engine.*``)."""
+        entries = {
+            "summarize": self._jit_summarize,
+            "commit": self._jit_commit,
+        }
+        for name, fn in self.engine.jit_entry_points().items():
+            entries[f"engine.{name}"] = fn
+        return entries
+
     # ------------------------------------------------------------------
     # fast path
     # ------------------------------------------------------------------

@@ -29,7 +29,7 @@ idle eviction keeping the resident set inside ``capacity``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -561,6 +561,14 @@ class FlowEngine:
                 ),
                 donate_argnums=(2, 3, 4, 5, 6),
             )
+
+    def jit_entry_points(self) -> Dict[str, Any]:
+        """Named jitted hot-path callables, for the retrace sentry
+        (:class:`repro.analysis.retrace_sentry.RetraceSentry`)."""
+        entries: Dict[str, Any] = {"step": self._jit_step}
+        if self._jit_fused is not None:
+            entries["fused"] = self._jit_fused
+        return entries
 
     def flow_ingest_dims(self) -> Dict[str, int]:
         """Problem dims the autotuner keys the flow_ingest sweep on."""

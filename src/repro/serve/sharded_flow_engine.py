@@ -201,6 +201,10 @@ class ShardedFlowEngine:
         )
         self._jit_step = jax.jit(smap, donate_argnums=(2, 3, 4, 5, 6))
 
+    def jit_entry_points(self):
+        """Named jitted hot-path callables, for the retrace sentry."""
+        return {"step": self._jit_step}
+
     # ------------------------------------------------------------------
     # compiled-program deployment
     # ------------------------------------------------------------------

@@ -196,7 +196,7 @@ class TestLedgerSerialization:
         assert back.report.as_dict() == program.ledger.report.as_dict()
         assert set(program.ledger.stages()) == {
             "signature-layout", "rule-packing", "state-quantization",
-            "kernel-backend", "resource-ledger",
+            "kernel-backend", "resource-ledger", "static-verification",
         }
 
     def test_overflow_horizon_covers_requested_flow_length(self, classifier):

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import RetraceSentry
 from repro.compile import compile_program
 from repro.data.pipeline import DriftPhase, DriftScenario, FlowScenario
 from repro.serve.flow_engine import (
@@ -180,9 +181,10 @@ class TestFusedDispatchShape:
         eng = FlowEngine.from_program(
             program, FlowEngineConfig(capacity=128, lanes=16, fused=True)
         )
+        sentry = RetraceSentry.for_engine(eng)
         n_widths = eng.warm_fused(pkt_len=8)
         assert n_widths == 2  # widths {8, 16} for lanes=16
-        assert eng._jit_fused._cache_size() == n_widths
+        assert sentry.counts()["fused"] == n_widths
 
         def replay_cycle(e):
             sc = flow_scenario()
@@ -191,12 +193,11 @@ class TestFusedDispatchShape:
                 e.ingest(b["flow_ids"], b["tokens"])
 
         replay_cycle(eng)
-        traced = eng._jit_fused._cache_size()
         # <= one entry per (width, pow2 chunk-bucket) pair, never one per
         # concrete (round-count, occupancy) shape
-        assert traced <= n_widths * 4
-        replay_cycle(eng)  # identical stream -> zero new traces
-        assert eng._jit_fused._cache_size() == traced, "steady-state retrace"
+        sentry.assert_total_traces(n_widths * 4)
+        with sentry.expect_no_retrace():  # identical stream: zero new traces
+            replay_cycle(eng)
 
     def test_warm_fused_non_pow2_min_chunk_lanes_matches_buckets(
         self, classifier
@@ -212,12 +213,12 @@ class TestFusedDispatchShape:
             )
         )
         assert eng.warm_fused(pkt_len=8) == 2  # widths {16, 32}
-        warmed = eng._jit_fused._cache_size()
+        sentry = RetraceSentry.for_engine(eng)
         # 40 distinct flows in one round -> chunks of 32 and 8 packets,
         # bucketed to widths 32 and next_pow2(max(8, 12)) = 16
         flow_ids = np.arange(40)
-        eng.ingest(flow_ids, np.ones((40, 8), np.int32))
-        assert eng._jit_fused._cache_size() == warmed, "mid-stream retrace"
+        with sentry.expect_no_retrace():
+            eng.ingest(flow_ids, np.ones((40, 8), np.int32))
 
     def test_fused_rounds_not_more_launches_than_legacy(self, classifier):
         legacy, fused = _pair(classifier, "reference", capacity=512)
