@@ -43,6 +43,9 @@ def main() -> None:
         "serve_flow_sharded": lambda: serve_bench.serve_flow_sharded_benchmarks(
             fast=args.fast
         ),
+        "serve_elastic": lambda: serve_bench.serve_elastic_benchmarks(
+            fast=args.fast
+        ),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -7,8 +7,13 @@ kernel backend (``serve_flow``), per device count for the sharded engine
 ``XLA_FLAGS=--xla_force_host_platform_device_count`` can differ per point),
 and with the closed adaptation loop on vs off over a non-stationary
 :class:`DriftScenario` (``serve_adaptive``: drift-stats overhead,
-installs/hour, Eq. 18 budget compliance).  Runs standalone (the CI smoke +
-regression gates) or as suites of ``benchmarks.run``:
+installs/hour, Eq. 18 budget compliance).  ``serve_elastic`` drives the
+:class:`~repro.serve.elastic.ElasticFlowService` through a live reshard
+cycle (S → 2S → S, subprocess with forced host devices): steady-state pps
+before/during/after the cycle feeds the regression gate, and each
+reshard's Eq. 18-measured install cost lands in derived-only rows.  Runs
+standalone (the CI smoke + regression gates) or as suites of
+``benchmarks.run``:
 
     PYTHONPATH=src python -m benchmarks.serve_bench --fast
     PYTHONPATH=src python -m benchmarks.serve_bench --fast --json BENCH_serve.json
@@ -43,7 +48,8 @@ import jax.numpy as jnp
 from benchmarks.common import csv_row, tiny_backbone
 from repro.compile import compile_program
 from repro.data.pipeline import DriftPhase, DriftScenario, FlowScenario
-from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+from repro.serve.deploy import DeploySpec, ElasticConfig
+from repro.serve.flow_engine import FlowEngineConfig
 from repro.train import classifier as C
 
 # backends runnable on this host; "xla" is the pure-jnp decode path, the
@@ -114,7 +120,8 @@ def serve_flow_benchmarks(fast: bool = False) -> List[str]:
             )
             if eng is None:
                 # the deploy path under benchmark IS the compiled artifact:
-                # compile once per backend, deploy via from_program
+                # compile once per backend, deploy through the DeploySpec
+                # front door
                 program = compile_program(
                     ccfg, params,
                     rules=lambda c: C.default_rules(
@@ -122,13 +129,13 @@ def serve_flow_benchmarks(fast: bool = False) -> List[str]:
                     ),
                     backend=backend,
                 )
-                eng = FlowEngine.from_program(
-                    program, FlowEngineConfig(**fcfg_kw)
+                eng = program.deploy(
+                    DeploySpec(flow=FlowEngineConfig(**fcfg_kw))
                 )
                 # the fused engine shares the program; warm_fused pre-traces
                 # the width buckets so the timed region is launch + compute
-                fused_eng = FlowEngine.from_program(
-                    program, FlowEngineConfig(fused=True, **fcfg_kw)
+                fused_eng = program.deploy(
+                    DeploySpec(flow=FlowEngineConfig(fused=True, **fcfg_kw))
                 )
                 fused_eng.warm_fused(pkt_len=16)
                 pipe = AsyncIngestPipeline(fused_eng)
@@ -219,11 +226,10 @@ def serve_adaptive_benchmarks(fast: bool = False) -> List[str]:
             ),
             backend="xla",
         )
-        eng = FlowEngine.from_program(
-            program,
-            FlowEngineConfig(capacity=1024 if fast else 2048,
-                             lanes=128 if fast else 256),
-        )
+        eng = program.deploy(DeploySpec(
+            flow=FlowEngineConfig(capacity=1024 if fast else 2048,
+                                  lanes=128 if fast else 256),
+        ))
         loop = None
         if mode == "on":
             # async: the recluster/compile epoch rides a background thread,
@@ -291,11 +297,12 @@ def _sharded_worker_rows(num_shards: int, fast: bool) -> List[str]:
                 ),
                 backend="xla",
             )
-            eng = program.deploy(
-                FlowEngineConfig(capacity=512 if fast else 1024,
-                                 lanes=128 if fast else 256),
+            eng = program.deploy(DeploySpec(
+                engine="sharded",
+                flow=FlowEngineConfig(capacity=512 if fast else 1024,
+                                      lanes=128 if fast else 256),
                 num_shards=num_shards,
-            )
+            ))
         else:
             eng.reset()
         warm = sc.next_batch()
@@ -363,6 +370,100 @@ def serve_flow_sharded_benchmarks(fast: bool = False) -> List[str]:
 
 
 # --------------------------------------------------------------------------
+# elastic service: steady-state pps around a live reshard cycle, plus the
+# Eq. 18-measured install cost of each reshard
+# --------------------------------------------------------------------------
+
+def _elastic_worker_rows(devices: int, fast: bool) -> List[str]:
+    """Measure the ElasticFlowService through one reshard cycle
+    (S -> 2S -> S with S = devices/2), inside a subprocess whose XLA_FLAGS
+    forced ``devices`` host devices.  Emits steady-state pps rows before /
+    during / after the cycle (gated) and derived-only reshard-install rows
+    (``install_ms``; no ``pps`` key, so the gate never compares them)."""
+    lo, hi = max(1, devices // 2), devices
+    batches = 3 if fast else 6
+    ccfg, params = _build()
+    sc = FlowScenario(
+        kind="protocol-mix", pkt_len=16,
+        packets_per_batch=256 if fast else 512, seed=7,
+    )
+    program = compile_program(
+        ccfg, params,
+        rules=lambda c: C.default_rules(c, jnp.asarray(sc.anomaly_signature)),
+        backend="xla",
+    )
+    svc = program.deploy(DeploySpec(
+        engine="elastic", num_shards=lo,
+        flow=FlowEngineConfig(capacity=512 if fast else 1024,
+                              lanes=128 if fast else 256, t_cp_s=60.0),
+        elastic=ElasticConfig(keep_topologies=True),
+    ))
+
+    def timed(label: str) -> str:
+        warm = sc.next_batch()  # trace/warm outside the timed region
+        svc.ingest(warm["flow_ids"], warm["tokens"])
+        t0 = time.perf_counter()
+        pkts = 0
+        for _ in range(batches):
+            b = sc.next_batch()
+            svc.ingest(b["flow_ids"], b["tokens"])
+            pkts += len(b["flow_ids"])
+        dt = time.perf_counter() - t0
+        return _emit(
+            f"serve/elastic/protocol-mix/{label}",
+            dt / max(pkts, 1) * 1e6, pkts / dt, svc,
+            extra=f";shards={svc.num_shards}"
+                  f";aggregate_capacity={svc.aggregate_capacity}",
+        )
+
+    def reshard_row(label: str, n: int) -> str:
+        rec = svc.reshard(n)
+        return csv_row(
+            f"serve/elastic/reshard/{label}", rec.install_s * 1e6,
+            f"install_ms={rec.install_s * 1e3:.3f}"
+            f";migrated={rec.migrated_flows};moved={rec.moved_flows}"
+            f";churn_ok={int(rec.churn_ok)};t_cp_s={rec.t_cp_s:g}",
+        )
+
+    rows = [timed(f"shards{lo}-pre")]
+    rows.append(reshard_row(f"shards{lo}-to-{hi}", hi))
+    rows.append(timed(f"shards{hi}"))
+    rows.append(reshard_row(f"shards{hi}-to-{lo}", lo))
+    rows.append(timed(f"shards{lo}-post"))
+    return rows
+
+
+def serve_elastic_benchmarks(fast: bool = False) -> List[str]:
+    """Elastic reshard cycle in a subprocess with forced host devices
+    (2 fast / 8 full), so the sweep runs on single-device CI hosts too."""
+    devices = 2 if fast else 8
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}"
+    ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo_root, "src"),
+                    env.get("PYTHONPATH", "")) if p
+    )
+    cmd = [sys.executable, "-m", "benchmarks.serve_bench",
+           "--elastic-worker", str(devices)] + (["--fast"] if fast else [])
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, env=env, cwd=repo_root,
+        timeout=1800,
+    )
+    if proc.returncode != 0:
+        err_lines = (proc.stderr or "").strip().splitlines()
+        return [csv_row(
+            f"serve/elastic/ERROR/devices{devices}", 0.0,
+            err_lines[-1] if err_lines else "worker failed",
+        )]
+    return [line for line in proc.stdout.splitlines()
+            if line.startswith("serve/elastic/")]
+
+
+# --------------------------------------------------------------------------
 # JSON dump + the >30% pkts/sec regression gate
 # --------------------------------------------------------------------------
 
@@ -424,10 +525,13 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump results as machine-readable JSON")
     ap.add_argument("--suite", default="all",
-                    choices=("flow", "sharded", "adaptive", "all"))
+                    choices=("flow", "sharded", "adaptive", "elastic", "all"))
     ap.add_argument("--sharded-worker", type=int, default=0, metavar="N",
                     help="(internal) run the N-shard measurement in-process; "
                          "invoked by the sweep with N forced host devices")
+    ap.add_argument("--elastic-worker", type=int, default=0, metavar="N",
+                    help="(internal) run the elastic reshard cycle "
+                         "in-process; invoked with N forced host devices")
     ap.add_argument("--gate", default=None, metavar="NEW_JSON",
                     help="regression-gate mode: compare NEW_JSON against "
                          "--baseline instead of running benchmarks")
@@ -462,6 +566,8 @@ def main() -> None:
 
     if args.sharded_worker:
         rows = _sharded_worker_rows(args.sharded_worker, fast=args.fast)
+    elif args.elastic_worker:
+        rows = _elastic_worker_rows(args.elastic_worker, fast=args.fast)
     else:
         rows = []
         if args.suite in ("flow", "all"):
@@ -470,6 +576,8 @@ def main() -> None:
             rows += serve_adaptive_benchmarks(fast=args.fast)
         if args.suite in ("sharded", "all"):
             rows += serve_flow_sharded_benchmarks(fast=args.fast)
+        if args.suite in ("elastic", "all"):
+            rows += serve_elastic_benchmarks(fast=args.fast)
     print("name,us_per_call,derived")
     for row in rows:
         print(row, flush=True)

@@ -39,6 +39,7 @@ from repro.compile import compile_program
 from repro.configs import smoke_config
 from repro.data.pipeline import DriftPhase, DriftScenario
 from repro.serve.adaptive_loop import AdaptiveLoop, AdaptiveLoopConfig, DriftPolicy
+from repro.serve.deploy import DeploySpec
 from repro.serve.flow_engine import FlowEngineConfig
 from repro.train import classifier as C
 
@@ -66,7 +67,8 @@ def build(args):
             c, jnp.asarray(sc.phase_anomaly_signature(0))
         ),
     )
-    eng = program.deploy(FlowEngineConfig(capacity=2048, lanes=128))
+    eng = program.deploy(DeploySpec(
+        flow=FlowEngineConfig(capacity=2048, lanes=128)))
     return sc, program, eng
 
 

@@ -5,7 +5,7 @@ The compile/deploy protocol in one file: ``compile_program`` lowers the
 tiny classifier through the pass pipeline (signature layout, rule packing +
 HL-MRF weight-table compilation, streaming-state fixed point, kernel
 backend, resource ledger), the ledger proves the artifact fits the
-``DataplaneSpec`` budget, and ``FlowEngine.from_program`` installs it on
+``DataplaneSpec`` budget, and ``program.deploy(DeploySpec(...))`` installs it on
 the flow-table runtime.  A mixed packet-arrival scenario (steady protocol
 mix + port scans + bursts + rule-violating flows) then streams through the
 table.  Ends with a two-timescale control-plane update: a *program delta*
@@ -26,7 +26,8 @@ import numpy as np
 from repro.compile import compile_delta, compile_program
 from repro.configs import smoke_config
 from repro.data.pipeline import FlowScenario
-from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+from repro.serve.deploy import DeploySpec
+from repro.serve.flow_engine import FlowEngineConfig
 from repro.train import classifier as C
 
 
@@ -53,8 +54,8 @@ def main():
     print("compile ledger (every stage within DataplaneSpec budget):")
     print(program.ledger.as_table())
 
-    engine = FlowEngine.from_program(
-        program, FlowEngineConfig(capacity=args.capacity, lanes=128))
+    engine = program.deploy(DeploySpec(
+        flow=FlowEngineConfig(capacity=args.capacity, lanes=128)))
     print(f"flow table: {args.capacity} entries x "
           f"{engine.per_flow_state_bytes()} B/flow = "
           f"{engine.resident_state_bytes()/2**20:.1f} MiB "

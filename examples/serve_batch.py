@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.compile import compile_program
 from repro.configs import get_config, smoke_config
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.deploy import DeploySpec
+from repro.serve.engine import Request
 from repro.train import classifier as C
 
 
@@ -35,7 +36,8 @@ def main():
     params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
     program = compile_program(
         ccfg, params, waivers=("state-quantization",) if args.full else ())
-    engine = ServeEngine.from_program(program, batch_slots=args.slots, max_len=512)
+    engine = program.deploy(
+        DeploySpec(engine="lm", batch_slots=args.slots, max_len=512))
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         engine.submit(Request(

@@ -27,7 +27,8 @@ def _verify_backend(backend, ccfg, params, rules_fn, scenario) -> Dict:
     from repro.analysis.retrace_sentry import RetraceError, RetraceSentry
     from repro.analysis.verify import verify_program
     from repro.compile import compile_program
-    from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+    from repro.serve.deploy import DeploySpec
+    from repro.serve.flow_engine import FlowEngineConfig
 
     program = compile_program(
         ccfg, params, rules=rules_fn, backend=backend, verify=False
@@ -39,8 +40,8 @@ def _verify_backend(backend, ccfg, params, rules_fn, scenario) -> Dict:
     # retrace audit of the deployed hot path: after one warmup tick, a
     # same-shaped tick must not retrace the jitted step
     retrace_ok, retrace_detail = True, "no mid-stream retrace after warmup"
-    engine = FlowEngine.from_program(
-        program, FlowEngineConfig(capacity=256, lanes=64)
+    engine = program.deploy(
+        DeploySpec(flow=FlowEngineConfig(capacity=256, lanes=64))
     )
     sentry = RetraceSentry.for_engine(engine)
     batch = scenario.next_batch()
@@ -60,6 +61,62 @@ def _verify_backend(backend, ccfg, params, rules_fn, scenario) -> Dict:
         "entries": rows,
         "retrace": {"ok": retrace_ok, "detail": retrace_detail},
         "ok": not errors and retrace_ok,
+    }
+
+
+def _elastic_reshard_audit(ccfg, params, rules_fn, scenario) -> Dict:
+    """Reshard-retrace sentry (DESIGN.md §17.1): a live reshard must never
+    retrace steady-state ingest.  The elastic service exposes every cached
+    topology's jitted step namespaced (``shards<N>.step``); after warming
+    both topologies, a full reshard cycle plus post-reshard ingest runs
+    under ``expect_no_retrace`` over all of them."""
+    import jax
+    import numpy as np
+
+    from repro.analysis.retrace_sentry import RetraceError, RetraceSentry
+    from repro.compile import compile_program
+    from repro.serve.deploy import DeploySpec, ElasticConfig
+    from repro.serve.flow_engine import FlowEngineConfig
+
+    name = "elastic-reshard-no-retrace"
+    if jax.device_count() < 2:
+        return {"name": name, "ok": True,
+                "detail": "skipped: needs >= 2 devices (multidevice lane runs it)"}
+    program = compile_program(
+        ccfg, params, rules=rules_fn, backend="xla", verify=False
+    )
+    svc = program.deploy(DeploySpec(
+        engine="elastic", num_shards=1,
+        flow=FlowEngineConfig(capacity=256, lanes=64),
+        elastic=ElasticConfig(keep_topologies=True),
+    ))
+
+    def tick():
+        b = scenario.next_batch()
+        svc.ingest(np.asarray(b["flow_ids"]), np.asarray(b["tokens"]))
+
+    tick()            # warm shards1.step
+    svc.reshard(2)
+    tick()            # warm shards2.step
+    svc.reshard(1)    # back onto the cached topology
+    sentry = RetraceSentry.for_engine(svc)
+    sentry.snapshot()
+    try:
+        with sentry.expect_no_retrace():
+            tick()
+            svc.reshard(2)
+            tick()    # steady-state ingest straight after the install
+            svc.reshard(1)
+            tick()
+    except RetraceError as e:
+        return {"name": name, "ok": False, "detail": str(e)}
+    return {
+        "name": name, "ok": True,
+        "detail": (
+            f"reshard 1->2->1 cycle retraced nothing across "
+            f"{len(svc.jit_entry_points())} namespaced entry point(s); "
+            f"{len(svc.reshard_history)} installs recorded"
+        ),
     }
 
 
@@ -127,6 +184,7 @@ def main(argv=None) -> int:
         backends.append("pallas-tpu")
 
     verdict = {"backends": [], "canaries": _canaries()}
+    verdict["elastic"] = _elastic_reshard_audit(ccfg, params, rules_fn, scenario)
     for backend in backends:
         result = _verify_backend(backend, ccfg, params, rules_fn, scenario)
         verdict["backends"].append(result)
@@ -140,9 +198,12 @@ def main(argv=None) -> int:
                   f"budget={row['budget']:g} {mark}")
     for c in verdict["canaries"]:
         print(f"[{'ok' if c['ok'] else 'FAIL'}] canary {c['name']}: {c['detail']}")
+    el = verdict["elastic"]
+    print(f"[{'ok' if el['ok'] else 'FAIL'}] {el['name']}: {el['detail']}")
 
     verdict["ok"] = (all(b["ok"] for b in verdict["backends"])
-                     and all(c["ok"] for c in verdict["canaries"]))
+                     and all(c["ok"] for c in verdict["canaries"])
+                     and el["ok"])
     with open(args.out, "w") as f:
         json.dump(verdict, f, indent=2)
     print(f"verdict {'ok' if verdict['ok'] else 'FAIL'} -> {args.out}")

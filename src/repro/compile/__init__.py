@@ -5,7 +5,7 @@ Front door::
     from repro.compile import compile_program, DataplaneProgram
 
     program = compile_program(ccfg, params, rules=lambda c: default_rules(c, sig))
-    engine = FlowEngine.from_program(program, FlowEngineConfig(capacity=2048))
+    engine = program.deploy(DeploySpec(flow=FlowEngineConfig(capacity=2048)))
 """
 
 from repro.compile.int_lowering import (

@@ -2,7 +2,7 @@
 
 Compiles the smoke config through every pass, asserts the resource ledger
 fits ``DEFAULT_DATAPLANE`` with no waivers, deploys via
-``FlowEngine.from_program``, and ingests one FlowScenario batch — failing
+``program.deploy(DeploySpec(...))``, and ingests one FlowScenario batch — failing
 loudly (nonzero exit) if any link of the compile/deploy protocol breaks.
 
     PYTHONPATH=src python -m repro.compile.gate
@@ -21,7 +21,8 @@ def main() -> int:
     from repro.compile import compile_program
     from repro.configs import smoke_config
     from repro.data.pipeline import FlowScenario
-    from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+    from repro.serve.deploy import DeploySpec
+    from repro.serve.flow_engine import FlowEngineConfig
     from repro.train import classifier as C
 
     # vocab 512: packet bytes 0..255 + field markers 256..511 (the
@@ -44,8 +45,8 @@ def main() -> int:
         print("GATE FAIL: smoke config must fit without waivers", file=sys.stderr)
         return 1
 
-    engine = FlowEngine.from_program(
-        program, FlowEngineConfig(capacity=256, lanes=64)
+    engine = program.deploy(
+        DeploySpec(flow=FlowEngineConfig(capacity=256, lanes=64))
     )
     batch = scenario.next_batch()
     out = engine.ingest(batch["flow_ids"], batch["tokens"])

@@ -8,13 +8,15 @@ streaming-state fixed-point format, the kernel backend/tile selection, and
 the per-stage :class:`ResourceLedger` proving it all fits the
 :class:`DataplaneSpec` budget (or recording which stages were waived).
 
-Deployment is ``FlowEngine.from_program`` / ``ServeEngine.from_program``;
-slow-timescale updates are :class:`ProgramDelta` objects (emitted by
-``TwoTimescaleController.maybe_recluster`` or :func:`compile_delta`
-directly) that ``FlowEngine.swap_tables`` installs atomically — every table
-that ever reaches the dataplane flows through the same audited compile
-path.  Programs serialize via :class:`repro.checkpoint.Checkpointer`
-(atomic, fsync'd) and reload bit-exactly.
+Deployment is ``program.deploy(DeploySpec(...))`` — one front door
+dispatching to the flow, sharded, elastic or LM serving runtimes
+(:mod:`repro.serve.deploy`, DESIGN.md §17); slow-timescale updates are
+:class:`ProgramDelta` objects (emitted by ``TwoTimescaleController
+.maybe_recluster`` or :func:`compile_delta` directly) that
+``FlowEngine.swap_tables`` installs atomically — every table that ever
+reaches the dataplane flows through the same audited compile path.
+Programs serialize via :class:`repro.checkpoint.Checkpointer` (atomic,
+fsync'd) and reload bit-exactly.
 """
 
 from __future__ import annotations
@@ -64,29 +66,56 @@ class DataplaneProgram:
         return self.ccfg.arch
 
     # ------------------------------------------------------------------
-    # deployment (front door onto the serving runtimes)
+    # deployment (the one front door onto the serving runtimes)
     # ------------------------------------------------------------------
-    def deploy(self, fcfg=None, *, mesh=None, num_shards: Optional[int] = None):
-        """Deploy onto the flow-table runtime.
+    def deploy(self, spec=None, *, mesh=None, num_shards: Optional[int] = None):
+        """Deploy this program onto a serving runtime.
 
-        With neither ``mesh`` nor ``num_shards``: a single-device
-        :class:`~repro.serve.flow_engine.FlowEngine` (unchanged fast
-        path).  With either: a :class:`~repro.serve.sharded_flow_engine
-        .ShardedFlowEngine` partitioned over the mesh ``data`` axis, with
-        the per-shard Eq. 11 flow-table budget recorded in this program's
-        ledger (``fcfg.capacity`` is then per shard; aggregate capacity is
-        shards × per-shard).
+        The supported surface is a :class:`repro.serve.deploy.DeploySpec`
+        naming the engine kind and its knobs (DESIGN.md §17)::
+
+            program.deploy(DeploySpec())                       # FlowEngine
+            program.deploy(DeploySpec(engine="sharded", num_shards=4))
+            program.deploy(DeploySpec(engine="elastic", num_shards=2,
+                                      elastic=ElasticConfig(...)))
+            program.deploy(DeploySpec(engine="lm", batch_slots=8))
+
+        ``deploy()`` with no arguments is the default single-device flow
+        deploy.  The legacy form ``deploy(fcfg, mesh=..., num_shards=...)``
+        still works but emits :class:`DeprecationWarning` and will be
+        removed one release cycle after the DeploySpec surface landed.
         """
-        from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+        from repro.serve.deploy import DeploySpec, deploy_program
 
-        fcfg = fcfg if fcfg is not None else FlowEngineConfig()
-        if mesh is None and num_shards is None:
-            return FlowEngine.from_program(self, fcfg)
-        from repro.serve.sharded_flow_engine import ShardedFlowEngine
+        if spec is None and mesh is None and num_shards is None:
+            return deploy_program(self, DeploySpec())
+        if isinstance(spec, DeploySpec):
+            if mesh is not None or num_shards is not None:
+                raise ValueError(
+                    "pass mesh/num_shards inside the DeploySpec, not "
+                    "alongside it"
+                )
+            return deploy_program(self, spec)
+        # legacy surface: deploy(fcfg, mesh=..., num_shards=...)
+        import warnings
 
-        return ShardedFlowEngine.from_program(
-            self, fcfg, mesh=mesh, num_shards=num_shards
+        from repro.serve.flow_engine import FlowEngineConfig
+
+        warnings.warn(
+            "DataplaneProgram.deploy(fcfg, mesh=..., num_shards=...) is "
+            "deprecated; pass a DeploySpec instead — deploy(DeploySpec("
+            "engine='sharded', flow=fcfg, num_shards=...)) (DESIGN.md "
+            "§17.4)",
+            DeprecationWarning, stacklevel=2,
         )
+        fcfg = spec if spec is not None else FlowEngineConfig()
+        if mesh is None and num_shards is None:
+            legacy = DeploySpec(engine="flow", flow=fcfg)
+        else:
+            legacy = DeploySpec(
+                engine="sharded", flow=fcfg, mesh=mesh, num_shards=num_shards
+            )
+        return deploy_program(self, legacy)
 
     # ------------------------------------------------------------------
     # serialization (atomic, via the Checkpointer)

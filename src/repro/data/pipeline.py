@@ -66,6 +66,18 @@ def flow_shard(fids, num_shards: int) -> np.ndarray:
     return (z % np.uint64(num_shards)).astype(np.int64)
 
 
+def reshard_moves(fids, old_shards: int, new_shards: int) -> np.ndarray:
+    """Boolean mask of flows whose owner changes between two shard counts —
+    the migrating key ranges a live reshard must quiesce (flows whose owner
+    is unchanged could keep serving through the install).  Pure function of
+    :func:`flow_shard`, so the service and the traffic generators agree on
+    exactly which keys move."""
+    f = np.atleast_1d(np.asarray(fids))
+    if f.size == 0:
+        return np.zeros((0,), bool)
+    return flow_shard(f, old_shards) != flow_shard(f, new_shards)
+
+
 def arrival_rounds(keys) -> "list[list[int]]":
     """Partition arrival-ordered items into rounds where every key appears at
     most once, preserving per-key order (round r holds each key's r-th

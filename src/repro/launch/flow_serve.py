@@ -19,6 +19,16 @@ Scale-out: ``--num-shards N`` deploys a ShardedFlowEngine over N devices
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) to expose N
 devices; ``--capacity`` is then per shard.
 
+Elastic serving: ``--elastic`` deploys the
+:class:`~repro.serve.elastic.ElasticFlowService` (DESIGN.md §17) —
+``--reshard 4:4,12:2`` live-reshards to 4 shards before batch 4 and back
+to 2 before batch 12 (each install Eq. 18-measured, bit-identical replay),
+``--checkpoint-dir``/``--checkpoint-every`` enable per-shard flow-state
+checkpoints for kill-a-shard recovery.
+
+    PYTHONPATH=src python -m repro.launch.flow_serve --smoke --elastic \
+        --host-devices 8 --num-shards 2 --reshard 4:4,12:2 --batches 16
+
 Closed-loop adaptation: ``--adapt`` streams a non-stationary
 :class:`~repro.data.pipeline.DriftScenario` (``--drift-phases`` schedules
 it; the default ends in an adversarial signature surge) through an
@@ -79,6 +89,19 @@ def main() -> None:
     ap.add_argument("--num-shards", type=int, default=0,
                     help="shard the flow table over N devices (mesh 'data' "
                          "axis); 0 = single-device FlowEngine")
+    ap.add_argument("--elastic", action="store_true",
+                    help="deploy the ElasticFlowService (DESIGN.md §17): "
+                         "sharded serving with live resharding, per-shard "
+                         "checkpoints and admission control")
+    ap.add_argument("--reshard", default="", metavar="B:S,...",
+                    help="live-reshard schedule: before batch B, reshard to "
+                         "S shards (comma-separated; requires --elastic), "
+                         "e.g. 4:4,12:2")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="elastic flow-state checkpoint directory")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="ticks between automatic elastic checkpoints "
+                         "(0 = manual)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N XLA host-platform (CPU) devices; must be "
                          "set before jax initializes, so prefer this flag "
@@ -105,7 +128,8 @@ def main() -> None:
     from repro.compile import compile_program
     from repro.configs import get_config, smoke_config
     from repro.data.pipeline import DriftScenario, FlowScenario, parse_phases
-    from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+    from repro.serve.deploy import DeploySpec, ElasticConfig
+    from repro.serve.flow_engine import FlowEngineConfig
     from repro.train import classifier as C
 
     arch = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -139,14 +163,35 @@ def main() -> None:
     if args.save_program:
         program.save(args.save_program)
         print(f"program saved to {args.save_program}")
-    if args.fused and args.num_shards:
+    if args.fused and (args.num_shards or args.elastic):
         ap.error("--fused is single-device (ShardedFlowEngine launches "
-                 "per-shard rounds); drop one of --fused/--num-shards")
+                 "per-shard rounds); drop --fused or --num-shards/--elastic")
+    if args.reshard and not args.elastic:
+        ap.error("--reshard needs --elastic (only the ElasticFlowService "
+                 "can change num_shards live)")
+    if args.elastic and args.adapt:
+        ap.error("--adapt drives a fixed engine; combining it with "
+                 "--elastic resharding is not supported")
+    reshard_plan = {}
+    for part in filter(None, args.reshard.split(",")):
+        b, s = part.split(":")
+        reshard_plan[int(b)] = int(s)
     fcfg = FlowEngineConfig(capacity=args.capacity, lanes=args.lanes,
                             idle_timeout=args.idle_timeout, fused=args.fused)
-    engine = program.deploy(
-        fcfg, num_shards=args.num_shards if args.num_shards else None
-    )
+    if args.elastic:
+        spec = DeploySpec(
+            engine="elastic", flow=fcfg, num_shards=args.num_shards or 1,
+            elastic=ElasticConfig(
+                checkpoint_dir=args.checkpoint_dir,
+                checkpoint_every=args.checkpoint_every,
+            ),
+        )
+    elif args.num_shards:
+        spec = DeploySpec(engine="sharded", flow=fcfg,
+                          num_shards=args.num_shards)
+    else:
+        spec = DeploySpec(flow=fcfg)
+    engine = program.deploy(spec)
     loop = None
     if args.adapt:
         from repro.serve.adaptive_loop import AdaptiveLoop, AdaptiveLoopConfig
@@ -168,7 +213,13 @@ def main() -> None:
     t0 = time.perf_counter()
     pkts = 0
     sink = loop if loop is not None else (pipe or engine)
-    for _ in range(args.batches):
+    for i in range(args.batches):
+        if i in reshard_plan:
+            rec = engine.reshard(reshard_plan[i])
+            print(f"reshard @batch {i}: {rec.old_shards}->{rec.new_shards} "
+                  f"shards, {rec.migrated_flows} flows migrated "
+                  f"({rec.moved_flows} moved) in {rec.install_s*1e3:.2f}ms "
+                  f"{'ok' if rec.churn_ok else 'ROLLED BACK'}")
         batch = scenario.next_batch()
         if pipe is not None:
             pipe.submit(batch["flow_ids"], batch["tokens"])
@@ -186,7 +237,8 @@ def main() -> None:
         engine, "aggregate_state_budget_bytes", engine.state_budget_bytes
     )
     shards = (
-        f" shards={engine.num_shards}" if args.num_shards else ""
+        f" shards={engine.num_shards}"
+        if (args.num_shards or args.elastic) else ""
     )
     label = "drift" if args.adapt else args.scenario
     print(

@@ -28,7 +28,8 @@ def main() -> None:
 
     from repro.compile import compile_program
     from repro.configs import get_config, smoke_config
-    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.deploy import DeploySpec
+    from repro.serve.engine import Request
     from repro.train import classifier as C
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -41,7 +42,9 @@ def main() -> None:
         ccfg, params, backend=args.backend,
         waivers=() if args.smoke else ("state-quantization",),
     )
-    engine = ServeEngine.from_program(program, batch_slots=args.slots, max_len=512)
+    engine = program.deploy(
+        DeploySpec(engine="lm", batch_slots=args.slots, max_len=512)
+    )
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=(args.prompt_len,)).tolist()

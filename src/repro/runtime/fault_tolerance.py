@@ -145,3 +145,58 @@ class ElasticPlanner:
         return self.plan_after_failures(
             plan.dropped_workers[: max(0, len(plan.dropped_workers) - recovered)]
         )
+
+
+# --------------------------------------------------------------------------
+# serving-shard recovery (the flow-table analogue of ElasticPlanner; used
+# by repro.serve.elastic.ElasticFlowService — DESIGN.md §17.2)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardRecoveryPlan:
+    """Recovery recipe after losing flow-table shard(s): which shards
+    survive, the shrunk shard count to reshard onto, and the tick the
+    bounded packet-replay window must reach back to (the last checkpoint —
+    lost flows are restored at that tick and replayed forward)."""
+
+    failed: Tuple[int, ...]
+    surviving: Tuple[int, ...]
+    new_num_shards: int
+    replay_from_tick: int
+    note: str = ""
+
+    @property
+    def valid(self) -> bool:
+        return (
+            self.new_num_shards >= 1
+            and self.new_num_shards == len(self.surviving)
+            and not set(self.failed) & set(self.surviving)
+        )
+
+
+def plan_shard_recovery(
+    num_shards: int, failed: Sequence[int], checkpoint_tick: int
+) -> ShardRecoveryPlan:
+    """Plan kill-a-shard recovery for an elastic flow service.
+
+    Survivors keep their live rows (current state, nothing to replay);
+    flows owned by failed shards are restored from the ``checkpoint_tick``
+    snapshot and brought current by replaying the buffered post-checkpoint
+    batches routed to the failed shards under the OLD topology.
+    """
+    bad = sorted(set(int(f) for f in failed))
+    for f in bad:
+        if not 0 <= f < num_shards:
+            raise ValueError(f"failed shard {f} outside [0, {num_shards})")
+    surviving = tuple(s for s in range(num_shards) if s not in bad)
+    return ShardRecoveryPlan(
+        failed=tuple(bad),
+        surviving=surviving,
+        new_num_shards=len(surviving),
+        replay_from_tick=int(checkpoint_tick),
+        note=(
+            f"reshard {num_shards}->{len(surviving)}; restore failed-shard "
+            f"flows at tick {checkpoint_tick}, replay buffered batches "
+            f"with tick > {checkpoint_tick} for failed-shard keys"
+        ),
+    )

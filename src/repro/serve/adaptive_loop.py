@@ -211,8 +211,8 @@ class AdaptiveLoop:
         if getattr(engine, "program", None) is None:
             raise ValueError(
                 "AdaptiveLoop needs a program-deployed engine "
-                "(FlowEngine.from_program / DataplaneProgram.deploy): slow-"
-                "timescale deltas recompile against the installed program"
+                "(program.deploy(DeploySpec(...))): slow-timescale deltas "
+                "recompile against the installed program"
             )
         self.engine = engine
         self.policy = policy if policy is not None else DriftPolicy()

@@ -16,7 +16,8 @@ bound (Eq. 11/13).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,16 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M  # noqa: F401  (prefill_batch uses M)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """LM slot-engine counters (the ``stats`` leg of the
+    :class:`repro.serve.deploy.Engine` protocol)."""
+
+    ticks: int = 0
+    tokens_emitted: int = 0
+    requests_completed: int = 0
 
 
 @dataclasses.dataclass
@@ -65,22 +76,55 @@ class ServeEngine:
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.pending: List[Request] = []
         self._next_token = np.zeros((batch_slots,), np.int32)
+        self.stats = ServeStats()
         self._step = jax.jit(
             lambda p, tok, pos, c: M.decode_step(cfg, p, tok, pos, c)
         )
 
     # ------------------------------------------------------------------
+    # Engine protocol (repro.serve.deploy.Engine)
+    # ------------------------------------------------------------------
+    def jit_entry_points(self) -> Dict[str, Any]:
+        """Named jitted hot-path callables, for the retrace sentry."""
+        return {"step": self._step}
+
+    def ingest(self, flow_ids, tokens):
+        raise NotImplementedError(
+            "the LM slot engine serves token requests (submit/step), not "
+            "packet flows; deploy DeploySpec(engine='flow'|'sharded'|"
+            "'elastic') for flow ingest"
+        )
+
+    def flow_scores(self, fid: int):
+        raise NotImplementedError(
+            "the LM slot engine keeps no flow table; deploy "
+            "DeploySpec(engine='flow'|'sharded'|'elastic') for flow scores"
+        )
+
+    def swap_tables(self, ruleset=None, weights=None, weight_spec=None,
+                    delta=None):
+        raise NotImplementedError(
+            "the LM slot engine carries no rule tables; table swaps apply "
+            "to the flow-serving engines"
+        )
+
+    # ------------------------------------------------------------------
+    # compiled-program deployment (deprecated shim — DESIGN.md §17.4)
+    # ------------------------------------------------------------------
     @classmethod
     def from_program(cls, program, **kwargs) -> "ServeEngine":
-        """Deploy a compiled :class:`repro.compile.DataplaneProgram` as an
-        LM-style slot engine: the program's backbone and kernel-backend
-        selection, the same artifact the FlowEngine deploys.  ``kwargs``
-        are the deployment-site knobs (batch_slots, max_len, ...)."""
-        from repro.serve.flow_engine import _engine_kwargs_from_program
+        """Deprecated: deploy through the one front door instead —
+        ``program.deploy(DeploySpec(engine="lm", batch_slots=...))``."""
+        warnings.warn(
+            "ServeEngine.from_program is deprecated; use "
+            "DataplaneProgram.deploy(DeploySpec(engine='lm', "
+            "batch_slots=..., max_len=...)) — the shim will be removed one "
+            "release cycle after DeploySpec landed (DESIGN.md §17.4)",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.serve.deploy import build_serve_engine
 
-        kw = _engine_kwargs_from_program(program, backend=kwargs.get("backend"))
-        kwargs["backend"] = kw["backend"]
-        return cls(kw["ccfg"].arch, kw["params"]["backbone"], **kwargs)
+        return build_serve_engine(program, **kwargs)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -112,6 +156,7 @@ class ServeEngine:
         positions = jnp.asarray(self.positions)
         logits, self.caches = self._step(self.params, tokens, positions, self.caches)
         logits = np.asarray(logits, np.float32)
+        self.stats.ticks += 1
         emitted: Dict[int, List[int]] = {}
         for i, req in enumerate(self.active):
             if req is None:
@@ -135,6 +180,7 @@ class ServeEngine:
             req.generated.append(nxt)
             emitted.setdefault(req.rid, []).append(nxt)
             self._next_token[i] = nxt
+            self.stats.tokens_emitted += 1
             if (
                 nxt == req.eos_id
                 or len(req.generated) >= req.max_new_tokens
@@ -142,6 +188,7 @@ class ServeEngine:
             ):
                 req.done = True
                 self.active[i] = None
+                self.stats.requests_completed += 1
         return emitted
 
     def run_until_done(self, max_ticks: int = 10_000) -> None:

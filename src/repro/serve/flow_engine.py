@@ -29,6 +29,7 @@ idle eviction keeping the resident set inside ``capacity``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -622,35 +623,24 @@ class FlowEngine:
         return len(widths)
 
     # ------------------------------------------------------------------
-    # compiled-program deployment (the front-door construction path)
+    # compiled-program deployment (deprecated shim — DESIGN.md §17.4)
     # ------------------------------------------------------------------
     @classmethod
     def from_program(
         cls, program, fcfg: FlowEngineConfig = FlowEngineConfig()
     ) -> "FlowEngine":
-        """Deploy a compiled :class:`repro.compile.DataplaneProgram`.
-
-        The program supplies the classifier config (with the compiled
-        signature layout), parameters, packed rules, and the kernel backend
-        selected by the compile passes; ``fcfg`` supplies deployment-site
-        knobs (capacity, lanes, timeouts).  An explicit ``fcfg.backend``
-        overrides the program's selection.
-        """
-        kw = _engine_kwargs_from_program(program, backend=fcfg.backend)
-        fcfg = dataclasses.replace(
-            fcfg, backend=kw["backend"], horizon=program.horizon
+        """Deprecated: deploy through the one front door instead —
+        ``program.deploy(DeploySpec(engine="flow", flow=fcfg))``."""
+        warnings.warn(
+            "FlowEngine.from_program is deprecated; use "
+            "DataplaneProgram.deploy(DeploySpec(engine='flow', flow=fcfg)) "
+            "— the shim will be removed one release cycle after DeploySpec "
+            "landed (DESIGN.md §17.4)",
+            DeprecationWarning, stacklevel=2,
         )
-        eng = cls(kw["ccfg"], kw["params"], kw["rules"], fcfg)
-        eng.program = program
-        # a single-device deploy supersedes any earlier sharded placement or
-        # int lowering: drop the stale audit entries so the ledger describes
-        # the active deployment, then record this deploy's own lowering
-        program.ledger.entries = [
-            e for e in program.ledger.entries
-            if e.stage not in ("flow-table-sharding", "int-lowering")
-        ]
-        program.ledger.entries.extend(eng._int_entries)
-        return eng
+        from repro.serve.deploy import build_flow_engine
+
+        return build_flow_engine(program, fcfg)
 
     # ------------------------------------------------------------------
     # state accounting

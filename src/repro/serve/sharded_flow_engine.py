@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -55,7 +56,6 @@ from repro.serve.flow_engine import (
     FlowStats,
     FlowTableDirectory,
     SwapRecord,
-    _engine_kwargs_from_program,
     make_flow_step,
     resolve_swap,
 )
@@ -85,6 +85,17 @@ class ShardedFlowEngine:
         from repro.kernels.dispatch import apply_kernel_backend
         from repro.launch.mesh import make_flow_mesh, shard_map_compat
 
+        if fcfg.fused:
+            # the fused flow_ingest megakernel is a single-device launch;
+            # silently falling back to the per-round path here would make
+            # `fused=True` a no-op — refuse loudly instead of quietly
+            # serving at per-round throughput
+            raise NotImplementedError(
+                "FlowEngineConfig(fused=True) has no sharded implementation "
+                "(the fused flow_ingest launch is single-device). Deploy "
+                "with DeploySpec(engine='flow', flow=fcfg) for fused "
+                "ingest, or drop fused=True to shard the per-round path."
+            )
         if mesh is None:
             mesh = make_flow_mesh(num_shards)
         if "data" not in mesh.axis_names:
@@ -206,7 +217,7 @@ class ShardedFlowEngine:
         return {"step": self._jit_step}
 
     # ------------------------------------------------------------------
-    # compiled-program deployment
+    # compiled-program deployment (deprecated shim — DESIGN.md §17.4)
     # ------------------------------------------------------------------
     @classmethod
     def from_program(
@@ -217,42 +228,22 @@ class ShardedFlowEngine:
         mesh=None,
         num_shards: Optional[int] = None,
     ) -> "ShardedFlowEngine":
-        """Deploy a compiled :class:`repro.compile.DataplaneProgram` sharded
-        over the mesh ``data`` axis.
+        """Deprecated: deploy through the one front door instead —
+        ``program.deploy(DeploySpec(engine="sharded", flow=fcfg,
+        num_shards=..., mesh=...))``."""
+        warnings.warn(
+            "ShardedFlowEngine.from_program is deprecated; use "
+            "DataplaneProgram.deploy(DeploySpec(engine='sharded', "
+            "flow=fcfg, num_shards=..., mesh=...)) — the shim will be "
+            "removed one release cycle after DeploySpec landed "
+            "(DESIGN.md §17.4)",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.serve.deploy import build_sharded_engine
 
-        The per-shard Eq. 11 flow-table budget check runs at construction;
-        the resulting per-shard usage (and the shards × budget aggregate)
-        is recorded in the program's :class:`ResourceLedger` so the deploy
-        audit trail covers the sharded placement.
-        """
-        kw = _engine_kwargs_from_program(program, backend=fcfg.backend)
-        fcfg = dataclasses.replace(
-            fcfg, backend=kw["backend"], horizon=program.horizon
+        return build_sharded_engine(
+            program, fcfg, mesh=mesh, num_shards=num_shards
         )
-        eng = cls(
-            kw["ccfg"], kw["params"], kw["rules"], fcfg,
-            mesh=mesh, num_shards=num_shards,
-        )
-        eng.program = program
-        ledger = program.ledger
-        # re-deploys refresh (not duplicate) the placement and int-lowering
-        # entries so the ledger describes the active deployment
-        ledger.entries = [
-            e for e in ledger.entries
-            if e.stage not in ("flow-table-sharding", "int-lowering")
-        ]
-        ledger.entries.extend(eng._int_entries)
-        ledger.add(
-            "flow-table-sharding", "per-shard-table-bytes",
-            used=eng.shard_state_bytes(), budget=eng.state_budget_bytes,
-            detail=(
-                f"{eng.num_shards} shard(s) x {fcfg.capacity} flows/shard; "
-                f"aggregate capacity {eng.aggregate_capacity} flows, "
-                f"aggregate budget {eng.aggregate_state_budget_bytes} B"
-            ),
-        )
-        ledger.raise_if_over()
-        return eng
 
     # ------------------------------------------------------------------
     # routing + state accounting

@@ -42,6 +42,7 @@ from repro.serve.adaptive_loop import (
     AdaptiveLoopConfig,
     DriftPolicy,
 )
+from repro.serve.deploy import DeploySpec
 from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
 from repro.train import classifier as C
 
@@ -96,8 +97,10 @@ def build_loop(classifier, backend=None, num_shards=None, sync=True,
     # capacity sized so nothing evicts: under pressure global vs shard-local
     # LRU legitimately pick different victims, which is eviction policy,
     # not the replay/adaptation math under test here
+    fcfg = FlowEngineConfig(capacity=capacity, lanes=16)
     eng = program.deploy(
-        FlowEngineConfig(capacity=capacity, lanes=16), num_shards=num_shards
+        DeploySpec(engine="sharded", flow=fcfg, num_shards=num_shards)
+        if num_shards else DeploySpec(flow=fcfg)
     )
     return AdaptiveLoop(
         eng,

@@ -21,6 +21,7 @@ from repro.compile import (
 from repro.configs import get_config
 from repro.core.hardware_model import DEFAULT_DATAPLANE, chimera_resource_report
 from repro.data.pipeline import FlowScenario
+from repro.serve.deploy import DeploySpec
 from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
 from repro.train import classifier as C
 
@@ -76,7 +77,7 @@ class TestSignatureLayout:
             ccfg, arch=dataclasses.replace(ccfg.arch, vocab_size=1024)
         )
         program = compile_program(wide, params, rules=_rules_fn((900, 901)))
-        eng = FlowEngine.from_program(program, FlowEngineConfig(capacity=4, lanes=4))
+        eng = program.deploy(DeploySpec(flow=FlowEngineConfig(capacity=4, lanes=4)))
         out = eng.ingest(np.array([1]), np.asarray([[900, 901, 0, 0]], np.int32))
         assert bool(out["vetoed"][0]) and float(out["trust"][0]) == 1.0
         # a different high marker must NOT alias onto the rule
@@ -225,7 +226,7 @@ class TestLegacyEquivalence:
             ccfg, params,
             rules=lambda c: C.default_rules(c, jnp.asarray(sc.anomaly_signature)),
         )
-        deployed = FlowEngine.from_program(program, fcfg)
+        deployed = program.deploy(DeploySpec(flow=fcfg))
 
         for _ in range(3):
             b = sc.next_batch()
@@ -239,13 +240,14 @@ class TestLegacyEquivalence:
             l, p = legacy.flow_scores(fid), deployed.flow_scores(fid)
             assert l == p, f"flow {fid} snapshot diverged"
 
-    def test_serve_engine_from_program_matches_direct(self, classifier):
+    def test_serve_engine_deploy_matches_direct(self, classifier):
         from repro.serve.engine import Request, ServeEngine
 
         ccfg, params = classifier
         program = compile_program(ccfg, params)
         direct = ServeEngine(ccfg.arch, params["backbone"], batch_slots=2, max_len=64)
-        via_program = ServeEngine.from_program(program, batch_slots=2, max_len=64)
+        via_program = program.deploy(
+            DeploySpec(engine="lm", batch_slots=2, max_len=64))
         r1 = Request(rid=0, prompt=[1, 2, 3, 4], max_new_tokens=4)
         r2 = Request(rid=0, prompt=[1, 2, 3, 4], max_new_tokens=4)
         direct.submit(r1)
@@ -287,8 +289,8 @@ class TestProgramSerialization:
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
         fcfg = FlowEngineConfig(capacity=8, lanes=4)
-        eng_a = FlowEngine.from_program(program, fcfg)
-        eng_b = FlowEngine.from_program(loaded, fcfg)
+        eng_a = program.deploy(DeploySpec(flow=fcfg))
+        eng_b = loaded.deploy(DeploySpec(flow=fcfg))
         b = sc.next_batch()
         out_a = eng_a.ingest(b["flow_ids"], b["tokens"])
         out_b = eng_b.ingest(b["flow_ids"], b["tokens"])
@@ -299,15 +301,15 @@ class TestProgramSerialization:
 
 
 # ==========================================================================
-# Shared from_program deploy path (PR 3 duplication follow-up)
+# Shared deploy path (PR 3 duplication follow-up, now via DeploySpec)
 # ==========================================================================
 
 class TestEngineKwargsFromProgram:
-    """FlowEngine / ShardedFlowEngine / ServeEngine ``from_program`` all
-    resolve their constructor inputs through one shared helper
-    (``serve.flow_engine._engine_kwargs_from_program``), and both engine
-    families accept every serialized DataplaneProgram the compile gate
-    emits — freshly compiled or reloaded from disk."""
+    """Every engine kind behind ``program.deploy(DeploySpec(...))``
+    resolves its constructor inputs through one shared helper in
+    ``serve.deploy``, and both engine families accept every serialized
+    DataplaneProgram the compile gate emits — freshly compiled or reloaded
+    from disk."""
 
     @pytest.mark.parametrize("backend", (None, "xla", "reference"))
     def test_both_engine_families_accept_gate_programs(
@@ -322,11 +324,11 @@ class TestEngineKwargsFromProgram:
         program.save(str(tmp_path / "prog"))
         loaded = DataplaneProgram.load(str(tmp_path / "prog"))
         for prog in (program, loaded):
-            feng = FlowEngine.from_program(
-                prog, FlowEngineConfig(capacity=8, lanes=4)
+            feng = prog.deploy(
+                DeploySpec(flow=FlowEngineConfig(capacity=8, lanes=4))
             )
             assert feng.backend == prog.backend
-            seng = ServeEngine.from_program(prog, batch_slots=2, max_len=32)
+            seng = prog.deploy(DeploySpec(engine="lm", batch_slots=2, max_len=32))
             assert seng.backend == prog.backend
         # the loaded program must actually serve on both runtimes
         feng.ingest(np.arange(3), np.full((3, 4), 300, np.int32))
@@ -343,13 +345,13 @@ class TestEngineKwargsFromProgram:
         program = compile_program(
             ccfg, params, rules=_rules_fn(), backend="xla"
         )
-        feng = FlowEngine.from_program(
-            program, FlowEngineConfig(capacity=8, lanes=4, backend="reference")
-        )
+        feng = program.deploy(DeploySpec(
+            flow=FlowEngineConfig(capacity=8, lanes=4, backend="reference")
+        ))
         assert feng.backend == "reference"
-        seng = ServeEngine.from_program(
-            program, batch_slots=2, max_len=32, backend="reference"
-        )
+        seng = program.deploy(DeploySpec(
+            engine="lm", batch_slots=2, max_len=32, backend="reference"
+        ))
         assert seng.backend == "reference"
 
 
@@ -384,7 +386,7 @@ class TestProgramDelta:
         delta = self._controller_delta(program, new_w)
         assert delta is not None and delta.ledger.fits()
 
-        eng = FlowEngine.from_program(program, FlowEngineConfig(capacity=8, lanes=4))
+        eng = program.deploy(DeploySpec(flow=FlowEngineConfig(capacity=8, lanes=4)))
         rec = eng.swap_tables(delta=delta)
         assert rec.source == "delta" and rec.churn_ok
         np.testing.assert_allclose(
@@ -425,21 +427,21 @@ class TestProgramDelta:
         ccfg, params = classifier
         program = compile_program(ccfg, params, rules=_rules_fn())
         delta = compile_delta(program, weights=np.asarray([1.0]))
-        eng = FlowEngine.from_program(program, FlowEngineConfig(capacity=8, lanes=4))
+        eng = program.deploy(DeploySpec(flow=FlowEngineConfig(capacity=8, lanes=4)))
         with pytest.raises(ValueError, match="not both"):
             eng.swap_tables(ruleset=program.rules, delta=delta)
 
     def test_swap_measures_install_and_flags_tcp_violation(self, classifier):
         ccfg, params = classifier
         program = compile_program(ccfg, params, rules=_rules_fn())
-        tight = FlowEngine.from_program(
-            program, FlowEngineConfig(capacity=8, lanes=4, t_cp_s=1e-12)
-        )
+        tight = program.deploy(DeploySpec(
+            flow=FlowEngineConfig(capacity=8, lanes=4, t_cp_s=1e-12)
+        ))
         rec = tight.swap_tables(ruleset=program.rules)
         assert rec.install_s > 0 and not rec.churn_ok  # violation flagged
         assert rec.t_cp_s == 1e-12
-        loose = FlowEngine.from_program(
-            program, FlowEngineConfig(capacity=8, lanes=4, t_cp_s=100.0)
-        )
+        loose = program.deploy(DeploySpec(
+            flow=FlowEngineConfig(capacity=8, lanes=4, t_cp_s=100.0)
+        ))
         rec = loose.swap_tables(ruleset=program.rules)
         assert rec.churn_ok and rec.t_cp_s == 100.0

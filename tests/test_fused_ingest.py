@@ -20,9 +20,9 @@ import pytest
 
 from repro.analysis import RetraceSentry
 from repro.compile import compile_program
+from repro.serve.deploy import DeploySpec
 from repro.data.pipeline import DriftPhase, DriftScenario, FlowScenario
 from repro.serve.flow_engine import (
-    FlowEngine,
     FlowEngineConfig,
     pack_width_groups,
 )
@@ -70,11 +70,12 @@ def _program(classifier, backend):
 def _pair(classifier, backend, capacity):
     """(legacy, fused) engines deployed from ONE compiled program."""
     program = _program(classifier, backend)
-    legacy = FlowEngine.from_program(
-        program, FlowEngineConfig(capacity=capacity, lanes=16)
+    legacy = program.deploy(
+        DeploySpec(flow=FlowEngineConfig(capacity=capacity, lanes=16))
     )
-    fused = FlowEngine.from_program(
-        program, FlowEngineConfig(capacity=capacity, lanes=16, fused=True)
+    fused = program.deploy(
+        DeploySpec(flow=FlowEngineConfig(capacity=capacity, lanes=16,
+                                         fused=True))
     )
     return legacy, fused
 
@@ -163,9 +164,9 @@ class TestFusedDifferential:
     def test_drift_pressure_with_idle_timeout(self, classifier):
         program = _program(classifier, "reference")
         fcfg = dict(capacity=24, lanes=16, idle_timeout=2)
-        legacy = FlowEngine.from_program(program, FlowEngineConfig(**fcfg))
-        fused = FlowEngine.from_program(
-            program, FlowEngineConfig(fused=True, **fcfg)
+        legacy = program.deploy(DeploySpec(flow=FlowEngineConfig(**fcfg)))
+        fused = program.deploy(
+            DeploySpec(flow=FlowEngineConfig(fused=True, **fcfg))
         )
         n = sum(p.batches for p in DRIFT_PHASES)
         _assert_replay_identical(legacy, fused, drift_scenario, batches=n)
@@ -178,9 +179,9 @@ class TestFusedDispatchShape:
         shape per pow2 width (plus chunk-bucket escalations), never one
         per (round-count, occupancy) pair."""
         program = _program(classifier, "reference")
-        eng = FlowEngine.from_program(
-            program, FlowEngineConfig(capacity=128, lanes=16, fused=True)
-        )
+        eng = program.deploy(DeploySpec(
+            flow=FlowEngineConfig(capacity=128, lanes=16, fused=True)
+        ))
         sentry = RetraceSentry.for_engine(eng)
         n_widths = eng.warm_fused(pkt_len=8)
         assert n_widths == 2  # widths {8, 16} for lanes=16
@@ -207,11 +208,9 @@ class TestFusedDispatchShape:
         must trace exactly those (not 12/24, which never occur) so a stream
         hitting every bucket adds zero steady-state traces."""
         program = _program(classifier, "reference")
-        eng = FlowEngine.from_program(
-            program, FlowEngineConfig(
-                capacity=128, lanes=32, min_chunk_lanes=12, fused=True
-            )
-        )
+        eng = program.deploy(DeploySpec(flow=FlowEngineConfig(
+            capacity=128, lanes=32, min_chunk_lanes=12, fused=True
+        )))
         assert eng.warm_fused(pkt_len=8) == 2  # widths {16, 32}
         sentry = RetraceSentry.for_engine(eng)
         # 40 distinct flows in one round -> chunks of 32 and 8 packets,
@@ -243,11 +242,9 @@ class TestStagingBufferReuse:
         host-to-device transfer may still be reading: every use within a
         dispatch gets its own occurrence-indexed buffer."""
         program = _program(classifier, "reference")
-        eng = FlowEngine.from_program(
-            program, FlowEngineConfig(
-                capacity=64, lanes=4, min_chunk_lanes=2, fused=True
-            )
-        )
+        eng = program.deploy(DeploySpec(flow=FlowEngineConfig(
+            capacity=64, lanes=4, min_chunk_lanes=2, fused=True
+        )))
         # 6 distinct flows x 2 packets -> two arrival rounds, each packing
         # a full-width chunk (w=4) then a 2-packet tail (w=2)
         flow_ids = np.tile(np.arange(6), 2)
@@ -273,9 +270,9 @@ class TestStagingBufferReuse:
         per-round engine exactly."""
         program = _program(classifier, "reference")
         fcfg = dict(capacity=64, lanes=4, min_chunk_lanes=2)
-        legacy = FlowEngine.from_program(program, FlowEngineConfig(**fcfg))
-        fused = FlowEngine.from_program(
-            program, FlowEngineConfig(fused=True, **fcfg)
+        legacy = program.deploy(DeploySpec(flow=FlowEngineConfig(**fcfg)))
+        fused = program.deploy(
+            DeploySpec(flow=FlowEngineConfig(fused=True, **fcfg))
         )
         rng = np.random.default_rng(7)
         for _ in range(4):

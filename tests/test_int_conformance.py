@@ -43,7 +43,8 @@ from repro.compile.int_lowering import (
 )
 from repro.data.pipeline import DriftPhase, DriftScenario, FlowScenario
 from repro.kernels import dispatch
-from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+from repro.serve.deploy import DeploySpec
+from repro.serve.flow_engine import FlowEngineConfig
 from repro.train import classifier as C
 
 pytestmark = pytest.mark.conformance
@@ -90,8 +91,8 @@ def build_engine(classifier, backend, capacity=512):
         rules=lambda c: C.default_rules(c, jnp.asarray(sc.anomaly_signature)),
         backend=backend,
     )
-    return FlowEngine.from_program(
-        program, FlowEngineConfig(capacity=capacity, lanes=16)
+    return program.deploy(
+        DeploySpec(flow=FlowEngineConfig(capacity=capacity, lanes=16))
     )
 
 
@@ -422,8 +423,6 @@ class TestShardedIntEmulation:
     must match a single-device int deploy bit-for-bit."""
 
     def _engines(self, classifier, capacity=512):
-        from repro.serve.sharded_flow_engine import ShardedFlowEngine
-
         ccfg, params = classifier
         sc = flow_scenario()
         program = compile_program(
@@ -431,13 +430,14 @@ class TestShardedIntEmulation:
             rules=lambda c: C.default_rules(c, jnp.asarray(sc.anomaly_signature)),
             backend="int-emulation",
         )
-        single = FlowEngine.from_program(
-            program, FlowEngineConfig(capacity=capacity, lanes=16)
+        single = program.deploy(
+            DeploySpec(flow=FlowEngineConfig(capacity=capacity, lanes=16))
         )
-        shard = ShardedFlowEngine.from_program(
-            program, FlowEngineConfig(capacity=capacity, lanes=16),
+        shard = program.deploy(DeploySpec(
+            engine="sharded",
+            flow=FlowEngineConfig(capacity=capacity, lanes=16),
             num_shards=2,
-        )
+        ))
         return single, shard
 
     def test_two_shard_decisions_match_single_device(self, classifier):

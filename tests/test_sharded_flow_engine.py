@@ -20,6 +20,7 @@ import numpy as np
 import pytest
 
 from repro.data.pipeline import FlowScenario, flow_shard
+from repro.serve.deploy import DeploySpec
 from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
 from repro.serve.sharded_flow_engine import ShardedFlowEngine
 from repro.train import classifier as C
@@ -261,9 +262,10 @@ class TestShardedDeploy:
 
         ccfg, params = classifier
         program = compile_program(ccfg, params, rules=_rules, backend="xla")
-        eng = program.deploy(
-            FlowEngineConfig(capacity=16, lanes=8), num_shards=1
-        )
+        eng = program.deploy(DeploySpec(
+            engine="sharded", flow=FlowEngineConfig(capacity=16, lanes=8),
+            num_shards=1,
+        ))
         assert isinstance(eng, ShardedFlowEngine)
         assert eng.program is program and eng.backend == "xla"
         entries = [e for e in program.ledger.entries
@@ -274,7 +276,10 @@ class TestShardedDeploy:
         assert e.budget == eng.state_budget_bytes
         assert f"aggregate capacity {eng.aggregate_capacity}" in e.detail
         # re-deploys refresh rather than duplicate the placement entry
-        program.deploy(FlowEngineConfig(capacity=16, lanes=8), num_shards=1)
+        program.deploy(DeploySpec(
+            engine="sharded", flow=FlowEngineConfig(capacity=16, lanes=8),
+            num_shards=1,
+        ))
         assert len([e for e in program.ledger.entries
                     if e.stage == "flow-table-sharding"]) == 1
 
@@ -284,7 +289,8 @@ class TestShardedDeploy:
         ccfg, params = classifier
         program = compile_program(ccfg, params, rules=_rules, backend="xla")
         assert isinstance(
-            program.deploy(FlowEngineConfig(capacity=16, lanes=8)), FlowEngine
+            program.deploy(DeploySpec(flow=FlowEngineConfig(
+                capacity=16, lanes=8))), FlowEngine
         )
 
 
@@ -296,7 +302,8 @@ SUBPROCESS_EQUIVALENCE = textwrap.dedent(
     import numpy as np, jax, jax.numpy as jnp
     from repro.configs import smoke_config
     from repro.data.pipeline import FlowScenario
-    from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
+    from repro.serve.deploy import DeploySpec
+from repro.serve.flow_engine import FlowEngine, FlowEngineConfig
     from repro.serve.sharded_flow_engine import ShardedFlowEngine
     from repro.train import classifier as C
 
