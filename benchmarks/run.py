@@ -46,6 +46,9 @@ def main() -> None:
         "serve_elastic": lambda: serve_bench.serve_elastic_benchmarks(
             fast=args.fast
         ),
+        "serve_redteam": lambda: serve_bench.serve_redteam_benchmarks(
+            fast=args.fast
+        ),
     }
     if args.only:
         keep = set(args.only.split(","))

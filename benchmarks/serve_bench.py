@@ -270,6 +270,38 @@ def serve_adaptive_benchmarks(fast: bool = False) -> List[str]:
     return rows
 
 
+def serve_redteam_benchmarks(fast: bool = False) -> List[str]:
+    """Adaptive replay throughput per registered red-team campaign
+    (``fast`` = the smoke campaign only): pkts/sec with the loop closed,
+    plus the scorecard counters the trust gate checks — veto flips and
+    pinning violations ride along so a regression here is visible in the
+    bench CSV too, not only in the gate artifact."""
+    from repro.data.campaigns import SMOKE_CAMPAIGN, get_campaign, list_campaigns
+    from repro.serve import redteam as RT
+
+    rows: List[str] = []
+    names = (SMOKE_CAMPAIGN,) if fast else list_campaigns()
+    cfg = RT.RedTeamConfig(backend="xla")
+    for name in names:
+        campaign = get_campaign(name)
+        (correct, total, _vetoes, _anom, tracker, loop, wall, evicted,
+         _hist) = RT._replay_campaign_mode(campaign, cfg, "adaptive")
+        pkts = tracker.packets
+        acc = float(correct.sum() / max(total.sum(), 1))
+        rows.append(csv_row(
+            f"serve/redteam/{name}/xla",
+            wall / max(pkts, 1) * 1e6,
+            f"pps={pkts / wall:.0f}"
+            f";installs={loop.installs}"
+            f";within_t_cp={loop.installs_within_budget}"
+            f"/{max(loop.installs, 1)}"
+            f";veto_flips={tracker.veto_flips}"
+            f";pinning_violations={tracker.pinning_violations}"
+            f";evicted={evicted};accuracy={acc:.4f}",
+        ))
+    return rows
+
+
 # --------------------------------------------------------------------------
 # sharded sweep: pkts/sec and resident flows vs device count
 # --------------------------------------------------------------------------
@@ -525,7 +557,8 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump results as machine-readable JSON")
     ap.add_argument("--suite", default="all",
-                    choices=("flow", "sharded", "adaptive", "elastic", "all"))
+                    choices=("flow", "sharded", "adaptive", "elastic",
+                             "redteam", "all"))
     ap.add_argument("--sharded-worker", type=int, default=0, metavar="N",
                     help="(internal) run the N-shard measurement in-process; "
                          "invoked by the sweep with N forced host devices")
@@ -574,6 +607,8 @@ def main() -> None:
             rows += serve_flow_benchmarks(fast=args.fast)
         if args.suite in ("adaptive", "all"):
             rows += serve_adaptive_benchmarks(fast=args.fast)
+        if args.suite in ("redteam", "all"):
+            rows += serve_redteam_benchmarks(fast=args.fast)
         if args.suite in ("sharded", "all"):
             rows += serve_flow_sharded_benchmarks(fast=args.fast)
         if args.suite in ("elastic", "all"):

@@ -1,0 +1,226 @@
+"""Named adversarial-campaign library (DESIGN.md §18).
+
+A *campaign* is a named, versioned composition of :class:`~repro.data
+.pipeline.DriftPhase` segments modeling one attack arc end to end: benign
+baseline -> attack onset -> (optional escalation) -> aftermath.  The
+catalog follows the in-network attack/workload space the INSIGHT survey
+(arXiv:2505.24269) maps out, built from the repo's stationary generator
+kinds:
+
+* ``volumetric-ddos`` — floods of fresh flow ids (the ``burst`` kind's
+  periodic sprays) carrying a rotated rule-violating signature: volume +
+  evasion at once.
+* ``slowloris`` — many long-lived connections held open at a trickle;
+  state pressure instead of packet volume.
+* ``low-and-slow-exfil`` — a handful of very long flows hiding a rotated
+  signature at a low anomaly rate: the stealth case, where the novelty
+  signal is weakest.
+* ``scan-evasion`` — a coordinated port scan under a rotated signature:
+  the flood's per-flow shapes (2-packet probes) are maximally unlike the
+  traffic the rules were learned from.
+* ``flash-crowd`` — the benign control: the same burst arrival shape as a
+  DDoS with zero rule violations.  A trust gate that only ever sees
+  attacks can pass by vetoing everything; this campaign keeps it honest.
+* ``smoke-surge`` — the short CI fast-lane campaign (one signature
+  rotation, ~16 batches): the golden-scorecard reference.
+
+Every attack campaign follows the same *beachhead* arc, and the shape is
+load-bearing: the rotated signature first appears inside a shape-stable
+``protocol-mix`` segment (the attacker probing from ordinary-looking
+flows), which is where the novelty detector sees the rotated marker bits
+cleanly and the loop re-learns them; only then does the flood kind launch.
+A flood-first arc is exactly the evasion the veto-coverage gate in
+:func:`repro.serve.adaptive_loop.default_relearn` exists for — floods
+surge per-class handshake-marker bits that would drown the signature in
+the novelty statistics, so a relearn fired mid-flood would latch
+shape-transient bits instead of the signature.  (Repeated re-rotation
+after a successful re-learn is the documented open hard case: the learned
+conjunction's residual false fires keep the veto-coverage gate closed, so
+a second rotation inside one campaign is not yet recoverable — see
+DESIGN.md §18.)
+
+Each campaign pins its scenario geometry (pkt_len, packets/batch, seed) so
+replays are deterministic and the red-team scorecards comparable across
+commits, and may carry :attr:`Campaign.policy` overrides — the detector
+sensitivity a deployment would tune for that threat model (e.g. the
+flash-crowd control raises ``sig_novelty``/``churn_shift`` because a
+deployment expecting benign bursts must not re-learn from them).
+
+The registry is the single source the red-team harness
+(:mod:`repro.serve.redteam`), the ``--campaign`` serving CLI, the
+``redteam`` benchmark suite and the conformance tests all enumerate — a
+new entry here is automatically swept by the CI trust gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.data.pipeline import DriftPhase, DriftScenario
+
+SMOKE_CAMPAIGN = "smoke-surge"
+
+
+@dataclasses.dataclass(frozen=True)
+class Campaign:
+    """One named attack arc over the drift-phase algebra."""
+
+    name: str
+    goal: str  # the attacker's objective, one line (scorecard header)
+    phases: Tuple[DriftPhase, ...]
+    pkt_len: int = 8
+    packets_per_batch: int = 64
+    seed: int = 11
+    benign: bool = False  # control campaign: no rule violations expected
+    # DriftPolicy keyword overrides the red-team harness applies when
+    # replaying THIS campaign adaptively (deployment-tuned sensitivity)
+    policy: Mapping[str, float] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.phases:
+            raise ValueError(f"campaign {self.name!r} needs >= 1 phase")
+
+    @property
+    def batches(self) -> int:
+        return sum(p.batches for p in self.phases)
+
+    @property
+    def attack_phases(self) -> Tuple[int, ...]:
+        """Indices of phases that inject rule violations the deployed
+        rules have never seen (``sig_rotation > 0``)."""
+        return tuple(
+            i for i, p in enumerate(self.phases) if p.sig_rotation > 0
+        )
+
+    def scenario(self, shard_id: int = 0, num_shards: int = 1,
+                 **overrides) -> DriftScenario:
+        """A fresh deterministic replay of this campaign's traffic."""
+        kw = dict(
+            phases=self.phases, pkt_len=self.pkt_len,
+            packets_per_batch=self.packets_per_batch, seed=self.seed,
+            shard_id=shard_id, num_shards=num_shards,
+        )
+        kw.update(overrides)
+        return DriftScenario(**kw)
+
+
+CAMPAIGNS: Dict[str, Campaign] = {}
+
+
+def register_campaign(campaign: Campaign) -> Campaign:
+    if campaign.name in CAMPAIGNS:
+        raise ValueError(f"campaign {campaign.name!r} already registered")
+    CAMPAIGNS[campaign.name] = campaign
+    return campaign
+
+
+def get_campaign(name: str) -> Campaign:
+    if name not in CAMPAIGNS:
+        raise KeyError(
+            f"unknown campaign {name!r}; registered: {sorted(CAMPAIGNS)}"
+        )
+    return CAMPAIGNS[name]
+
+
+def list_campaigns() -> Tuple[str, ...]:
+    return tuple(sorted(CAMPAIGNS))
+
+
+# --------------------------------------------------------------------------
+# the catalog
+# --------------------------------------------------------------------------
+
+register_campaign(Campaign(
+    name=SMOKE_CAMPAIGN,
+    goal="short single-rotation surge (CI fast lane / golden scorecard)",
+    phases=(
+        DriftPhase(kind="protocol-mix", batches=4, anomaly_rate=0.3),
+        DriftPhase(kind="rule-violating", batches=14, anomaly_rate=0.6,
+                   sig_rotation=1),
+        DriftPhase(kind="heavy-churn", batches=5, anomaly_rate=0.3,
+                   sig_rotation=1),
+    ),
+    # short campaign: a tighter cooldown lets the loop land the install
+    # early enough in the 14-batch surge to clear the recovery floor
+    policy={"cooldown_ticks": 3},
+))
+
+register_campaign(Campaign(
+    name="volumetric-ddos",
+    goal="exhaust the flow table with fresh-id floods while slipping a "
+         "rotated signature past the stale TCAM",
+    phases=(
+        DriftPhase(kind="protocol-mix", batches=4, anomaly_rate=0.3),
+        DriftPhase(kind="protocol-mix", batches=12, anomaly_rate=0.6,
+                   sig_rotation=1),
+        DriftPhase(kind="burst", batches=10, anomaly_rate=0.5,
+                   sig_rotation=1),
+        DriftPhase(kind="heavy-churn", batches=6, anomaly_rate=0.3,
+                   sig_rotation=1),
+    ),
+    policy={"cooldown_ticks": 3},
+))
+
+register_campaign(Campaign(
+    name="slowloris",
+    goal="hold many near-idle connections open to squat flow state, with "
+         "violations trickling under a rotated signature",
+    phases=(
+        DriftPhase(kind="protocol-mix", batches=4, anomaly_rate=0.3),
+        DriftPhase(kind="protocol-mix", batches=12, anomaly_rate=0.6,
+                   sig_rotation=1),
+        DriftPhase(kind="slowloris", batches=12, anomaly_rate=0.5,
+                   sig_rotation=1),
+        DriftPhase(kind="heavy-churn", batches=6, anomaly_rate=0.3,
+                   sig_rotation=1),
+    ),
+    policy={"cooldown_ticks": 3},
+))
+
+register_campaign(Campaign(
+    name="low-and-slow-exfil",
+    goal="exfiltrate through a few very long flows at a low violation "
+         "rate: the weakest novelty signal the loop must still catch",
+    phases=(
+        DriftPhase(kind="protocol-mix", batches=4, anomaly_rate=0.3),
+        DriftPhase(kind="protocol-mix", batches=12, anomaly_rate=0.6,
+                   sig_rotation=1),
+        DriftPhase(kind="low-and-slow", batches=14, anomaly_rate=0.3,
+                   sig_rotation=1),
+    ),
+    policy={"cooldown_ticks": 3},
+))
+
+register_campaign(Campaign(
+    name="scan-evasion",
+    goal="coordinated probe scan under a rotated signature: 2-packet "
+         "flow shapes maximally unlike the rules' training traffic",
+    phases=(
+        DriftPhase(kind="protocol-mix", batches=4, anomaly_rate=0.3),
+        DriftPhase(kind="protocol-mix", batches=12, anomaly_rate=0.6,
+                   sig_rotation=1),
+        DriftPhase(kind="port-scan", batches=10, anomaly_rate=0.6,
+                   sig_rotation=1),
+        DriftPhase(kind="heavy-churn", batches=6, anomaly_rate=0.3,
+                   sig_rotation=1),
+    ),
+    policy={"cooldown_ticks": 3},
+))
+
+register_campaign(Campaign(
+    name="flash-crowd",
+    goal="benign control: DDoS-shaped arrival burst with zero rule "
+         "violations — the gate must not reward blanket vetoing",
+    phases=(
+        DriftPhase(kind="protocol-mix", batches=5, anomaly_rate=0.0),
+        DriftPhase(kind="burst", batches=8, anomaly_rate=0.0),
+        DriftPhase(kind="protocol-mix", batches=5, anomaly_rate=0.0),
+    ),
+    benign=True,
+    # benign burst shapes (churn spikes, handshake-marker surges) look
+    # exactly like attack transients to the default detectors; a control
+    # deployment that expects flash crowds runs them deliberately colder
+    # so the loop does not re-learn (and install junk rules) from them
+    policy={"sig_novelty": 0.15, "churn_shift": 0.4},
+))

@@ -241,6 +241,15 @@ SCENARIO_KINDS: Dict[str, Dict[str, float]] = {
                         anomaly_rate=0.0),
     "rule-violating": dict(new_flows=16, mean_pkts=8, burst_every=0,
                            burst_size=0, anomaly_rate=0.5),
+    # campaign-library kinds (repro.data.campaigns): slowloris holds many
+    # long-lived connections open at a trickle (each flow's packets spread
+    # thin across the uniformly-sampled emission lanes); low-and-slow is a
+    # handful of very long flows — the exfiltration shape that hides a
+    # signature burst inside an otherwise unremarkable stream
+    "slowloris": dict(new_flows=48, mean_pkts=32, burst_every=0, burst_size=0,
+                      anomaly_rate=0.0),
+    "low-and-slow": dict(new_flows=4, mean_pkts=48, burst_every=0,
+                         burst_size=0, anomaly_rate=0.0),
 }
 _MIX_CYCLE = (
     "protocol-mix", "port-scan", "burst", "heavy-churn", "rule-violating",
@@ -507,9 +516,23 @@ def parse_phases(spec: str) -> Tuple[DriftPhase, ...]:
             raise ValueError(
                 f"bad phase {item!r}; want kind:batches[:rot[:anomaly_rate]]"
             )
+        # validate up front: a bad kind or non-positive length otherwise
+        # surfaces batches later as a confusing DriftScenario/FlowScenario
+        # failure far from the CLI flag that caused it
+        kind = parts[0]
+        if kind != "mix" and kind not in SCENARIO_KINDS:
+            raise ValueError(
+                f"unknown phase kind {kind!r} in {item!r}; "
+                f"expected 'mix' or one of {sorted(SCENARIO_KINDS)}"
+            )
+        batches = int(parts[1])
+        if batches <= 0:
+            raise ValueError(
+                f"phase batches must be >= 1, got {batches} in {item!r}"
+            )
         phases.append(DriftPhase(
-            kind=parts[0],
-            batches=int(parts[1]),
+            kind=kind,
+            batches=batches,
             sig_rotation=int(parts[2]) if len(parts) > 2 else 0,
             anomaly_rate=float(parts[3]) if len(parts) > 3 else None,
         ))

@@ -39,6 +39,18 @@ full scenario batches as usual.
 
     PYTHONPATH=src python -m repro.launch.flow_serve --smoke --adapt \
         --batches 16 [--adapt-sync] [--drift-phases protocol-mix:6,...]
+
+Campaigns and traces: ``--campaign NAME`` replays a named adversarial
+campaign from :mod:`repro.data.campaigns` (its pinned geometry, schedule
+and detector-policy overrides) under the AdaptiveLoop — the serving-side
+view of what the red-team gate (``python -m repro.serve.redteam``) scores.
+``--trace PATH`` (or ``--trace sample``) replays a recorded
+chimera-trace-v1 file through :class:`~repro.data.traces
+.TraceReplayScenario` instead of a generator.
+
+    PYTHONPATH=src python -m repro.launch.flow_serve --smoke \
+        --campaign scan-evasion [--adapt-sync]
+    PYTHONPATH=src python -m repro.launch.flow_serve --smoke --trace sample
 """
 
 from __future__ import annotations
@@ -86,6 +98,13 @@ def main() -> None:
                             "heavy-churn:6:1",
                     help="DriftScenario schedule: comma-separated "
                          "kind:batches[:sig_rotation[:anomaly_rate]]")
+    ap.add_argument("--campaign", default=None, metavar="NAME",
+                    help="replay a registered adversarial campaign (see "
+                         "repro.data.campaigns) under the AdaptiveLoop with "
+                         "its pinned geometry and policy; implies --adapt")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a recorded chimera-trace-v1 file ('sample' "
+                         "= the committed fixture) instead of a generator")
     ap.add_argument("--num-shards", type=int, default=0,
                     help="shard the flow table over N devices (mesh 'data' "
                          "axis); 0 = single-device FlowEngine")
@@ -138,7 +157,36 @@ def main() -> None:
     ccfg = C.ClassifierConfig(arch=arch, n_classes=8, marker_base=256)
     params, _ = C.init_classifier(ccfg, jax.random.PRNGKey(0))
 
-    if args.adapt:
+    if args.campaign and args.trace:
+        ap.error("--campaign and --trace are mutually exclusive")
+    campaign = None
+    if args.campaign:
+        from repro.data.campaigns import get_campaign
+
+        campaign = get_campaign(args.campaign)
+        # the campaign pins its own geometry so scorecards stay comparable
+        args.pkt_len = campaign.pkt_len
+        args.packets = campaign.packets_per_batch
+        args.adapt = True
+        scenario = campaign.scenario(vocab_size=vocab)
+        if args.batches == ap.get_default("batches"):
+            args.batches = campaign.batches
+        print(f"campaign {campaign.name!r}: {campaign.goal}")
+    elif args.trace:
+        from repro.data import traces as TR
+
+        path = None if args.trace == "sample" else args.trace
+        trace = TR.load_trace(path or TR.SAMPLE_TRACE)
+        args.pkt_len = trace.meta.pkt_len
+        scenario = TR.TraceReplayScenario(
+            trace, packets_per_batch=args.packets
+        )
+        if args.batches == ap.get_default("batches"):
+            args.batches = scenario.batches_per_cycle
+        args.batches = min(args.batches, scenario.batches_per_cycle)
+        print(f"trace {args.trace!r}: {len(trace.flow_ids)} packets / "
+              f"{scenario.batches_per_cycle} batches")
+    elif args.adapt:
         scenario = DriftScenario(
             phases=parse_phases(args.drift_phases), vocab_size=vocab,
             pkt_len=args.pkt_len, packets_per_batch=args.packets, seed=0,
@@ -194,10 +242,19 @@ def main() -> None:
     engine = program.deploy(spec)
     loop = None
     if args.adapt:
-        from repro.serve.adaptive_loop import AdaptiveLoop, AdaptiveLoopConfig
+        from repro.serve.adaptive_loop import (
+            AdaptiveLoop, AdaptiveLoopConfig, DriftPolicy,
+        )
 
+        policy, loop_cfg = None, {}
+        if campaign is not None:
+            from repro.serve.redteam import split_policy
+
+            drift, loop_cfg = split_policy(campaign.policy)
+            policy = DriftPolicy(**drift)
         loop = AdaptiveLoop(
-            engine, cfg=AdaptiveLoopConfig(sync=args.adapt_sync)
+            engine, policy=policy,
+            cfg=AdaptiveLoopConfig(sync=args.adapt_sync, **loop_cfg),
         )
 
     pipe = None
@@ -240,7 +297,12 @@ def main() -> None:
         f" shards={engine.num_shards}"
         if (args.num_shards or args.elastic) else ""
     )
-    label = "drift" if args.adapt else args.scenario
+    if campaign is not None:
+        label = f"campaign:{campaign.name}"
+    elif args.trace:
+        label = f"trace:{args.trace}"
+    else:
+        label = "drift" if args.adapt else args.scenario
     print(
         f"{label}: {pkts} packets / {s.flows_created} flows in "
         f"{dt:.2f}s = {pkts/dt:.0f} pkt/s ({pkts*args.pkt_len/dt:.0f} tok/s) | "

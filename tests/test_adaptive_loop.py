@@ -474,6 +474,17 @@ class TestDriftScenarioInvariants:
         with pytest.raises(ValueError, match="phase"):
             parse_phases("protocol-mix")
 
+    def test_parse_phases_validates_up_front(self):
+        """A bad schedule string fails at parse time with the offending
+        segment named — not batches later when the scenario first steps
+        into the broken phase."""
+        with pytest.raises(ValueError, match="no-such-kind"):
+            parse_phases("protocol-mix:4,no-such-kind:6")
+        with pytest.raises(ValueError, match="batches"):
+            parse_phases("protocol-mix:0")
+        with pytest.raises(ValueError, match="batches"):
+            parse_phases("protocol-mix:4,burst:-3")
+
     def test_rotated_signature_differs_and_is_stable(self):
         ds = make_scenario()
         base = ds.phase_anomaly_signature(0)

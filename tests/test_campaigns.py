@@ -1,0 +1,172 @@
+"""Campaign library tier (DESIGN.md §18): registry semantics, catalog
+sanity, and the backend-differential campaign conformance sweep.
+
+The conformance tier replays a registered campaign's traffic through
+engines compiled for different kernel backends and asserts the trust
+*decisions* (hard-veto bits and predicted class, per packet per batch) are
+bit-identical — the campaign-shaped analogue of test_int_conformance's
+stream checks.  Fast lane: ``xla`` vs ``int-emulation`` on the smoke
+campaign.  Slow lane: the full ``reference`` / ``pallas-interpret`` /
+``int-emulation`` 3-way.
+"""
+
+import numpy as np
+import pytest
+
+from repro.data.campaigns import (
+    CAMPAIGNS,
+    SMOKE_CAMPAIGN,
+    Campaign,
+    get_campaign,
+    list_campaigns,
+    register_campaign,
+)
+from repro.data.pipeline import DriftPhase, DriftScenario, flow_shard
+from repro.serve import redteam as RT
+
+BATCH_KEYS = ("flow_ids", "tokens", "labels", "anomalous", "first_packet")
+
+
+# ==========================================================================
+# registry
+# ==========================================================================
+
+class TestRegistry:
+    def test_catalog_names_are_sorted_and_complete(self):
+        names = list_campaigns()
+        assert names == tuple(sorted(names))
+        assert SMOKE_CAMPAIGN in names
+        assert {"volumetric-ddos", "slowloris", "low-and-slow-exfil",
+                "scan-evasion", "flash-crowd"} <= set(names)
+
+    def test_get_unknown_raises_with_catalog(self):
+        with pytest.raises(KeyError, match="registered"):
+            get_campaign("nope")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_campaign(CAMPAIGNS[SMOKE_CAMPAIGN])
+
+    def test_empty_campaign_rejected(self):
+        with pytest.raises(ValueError, match="phase"):
+            Campaign(name="x", goal="g", phases=())
+
+
+# ==========================================================================
+# catalog sanity: every entry is gate-runnable by construction
+# ==========================================================================
+
+class TestCatalog:
+    @pytest.mark.parametrize("name", list_campaigns())
+    def test_entry_is_well_formed(self, name):
+        c = get_campaign(name)
+        assert c.goal
+        assert c.batches == sum(p.batches for p in c.phases) > 0
+        if c.benign:
+            # the control must carry zero rotated-signature phases: its
+            # whole point is that the gate cannot pass by blanket vetoing
+            assert c.attack_phases == ()
+            assert all(p.anomaly_rate == 0.0 for p in c.phases)
+        else:
+            assert c.attack_phases, "attack campaign needs a rotation"
+        # policy overrides must route cleanly onto the two tuning surfaces
+        drift, loop_cfg = RT.split_policy(c.policy)
+        assert set(RT.DEFAULT_POLICY) <= set(drift)
+
+    @pytest.mark.parametrize("name", list_campaigns())
+    def test_attack_arcs_follow_the_beachhead_shape(self, name):
+        """The rotated signature must first appear in a shape-stable
+        protocol-mix segment, before any flood kind carries it (the
+        relearn's novelty statistics are only clean there — see the
+        module docstring in repro.data.campaigns)."""
+        c = get_campaign(name)
+        if c.benign:
+            return
+        first_attack = c.attack_phases[0]
+        assert c.phases[first_attack].kind in (
+            "protocol-mix", "rule-violating"
+        )
+        assert first_attack > 0, "campaigns open with a benign baseline"
+        assert c.phases[0].sig_rotation == 0
+
+    def test_scenario_is_deterministic_and_geometry_pinned(self):
+        c = get_campaign(SMOKE_CAMPAIGN)
+        a, b = c.scenario(), c.scenario()
+        assert isinstance(a, DriftScenario)
+        assert a.batches_per_cycle == c.batches
+        for _ in range(4):
+            x, y = a.next_batch(), b.next_batch()
+            for k in BATCH_KEYS:
+                np.testing.assert_array_equal(x[k], y[k])
+            assert x["tokens"].shape[1] == c.pkt_len
+
+    def test_scenario_sharding_partitions_batches(self):
+        c = get_campaign(SMOKE_CAMPAIGN)
+        full = c.scenario()
+        parts = [c.scenario(shard_id=s, num_shards=2) for s in range(2)]
+        for _ in range(5):
+            b = full.next_batch()
+            owners = flow_shard(b["flow_ids"], 2)
+            for s, p in enumerate(parts):
+                bs = p.next_batch()
+                for k in BATCH_KEYS:
+                    np.testing.assert_array_equal(bs[k], b[k][owners == s])
+
+    def test_scenario_overrides_pass_through(self):
+        c = get_campaign(SMOKE_CAMPAIGN)
+        sc = c.scenario(packets_per_batch=16)
+        assert sc.next_batch()["flow_ids"].shape[0] <= 16
+
+
+# ==========================================================================
+# backend-differential campaign conformance
+# ==========================================================================
+
+def campaign_decisions(name, backend, batches=10):
+    """Per-batch (vetoed, pred) decision history of a static replay of the
+    campaign's traffic on one backend (record_history drives reuse of the
+    exact harness replay loop — no parallel implementation to drift)."""
+    camp = get_campaign(name)
+    short = Campaign(
+        name=camp.name, goal=camp.goal, phases=camp.phases,
+        pkt_len=camp.pkt_len, packets_per_batch=camp.packets_per_batch,
+        seed=camp.seed, benign=camp.benign, policy=camp.policy,
+    )
+    cfg = RT.RedTeamConfig(backend=backend, record_history=True)
+    (correct, total, _, _, tracker, _, _, evicted,
+     history) = RT._replay_campaign_mode(short, cfg, "static")
+    assert evicted == 0
+    assert tracker.pinning_violations == 0
+    assert tracker.veto_flips == 0
+    return history[:batches]
+
+
+def assert_decisions_identical(name, a, hist_a, b, hist_b):
+    assert len(hist_a) == len(hist_b)
+    for i, (x, y) in enumerate(zip(hist_a, hist_b)):
+        for k in ("vetoed", "pred"):
+            np.testing.assert_array_equal(
+                x[k], y[k], err_msg=f"{name} batch {i} {k}: {a} vs {b}"
+            )
+
+
+@pytest.mark.conformance
+class TestBackendDifferential:
+    def test_smoke_campaign_int_decisions_match_float(self):
+        """Fast lane: the integer lowering makes bit-identical trust
+        decisions on the smoke campaign's full drift arc."""
+        f = campaign_decisions(SMOKE_CAMPAIGN, "xla")
+        g = campaign_decisions(SMOKE_CAMPAIGN, "int-emulation")
+        assert_decisions_identical(SMOKE_CAMPAIGN, "xla", f,
+                                   "int-emulation", g)
+        assert any(np.any(h["vetoed"]) for h in f), "vacuous: no vetoes"
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("backend",
+                             ("reference", "pallas-interpret",
+                              "int-emulation"))
+    def test_three_way_decisions_match_xla(self, backend):
+        """Slow lane: every audited backend agrees with the default."""
+        f = campaign_decisions(SMOKE_CAMPAIGN, "xla")
+        g = campaign_decisions(SMOKE_CAMPAIGN, backend)
+        assert_decisions_identical(SMOKE_CAMPAIGN, "xla", f, backend, g)

@@ -1,0 +1,168 @@
+"""Red-team trust-gate tier (DESIGN.md §18).
+
+* **Gate is green**: the smoke campaign's scorecard passes every check —
+  zero hard-veto flips, zero S=1.0 pinning violations, zero evictions,
+  per-phase adaptive recovery above the floor, every install inside the
+  Eq. 18 ``t_cp`` budget — and the sample-trace replay holds the same
+  invariants under a recorded arrival process.
+* **Gate is not vacuous**: the invariant tracker counts fabricated flips
+  and pinning breaks, and the scorecard fails when the bar is raised past
+  what the replay achieves.
+* **Pinned**: the smoke campaign's deterministic scorecard fields
+  (per-phase accuracy/veto rates/recovery, adaptation counts, the full
+  per-batch decision history) are frozen by a golden fixture — regenerate
+  with ``REGEN_GOLDEN=1 pytest tests/test_redteam.py -k golden``.
+
+The full campaign sweep is the CI slow lane
+(``python -m repro.serve.redteam --campaigns all``), not a unit test.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.campaigns import SMOKE_CAMPAIGN, get_campaign
+from repro.serve.redteam import (
+    DEFAULT_POLICY,
+    RedTeamConfig,
+    TrustInvariantTracker,
+    run_campaign,
+    run_trace,
+    split_policy,
+)
+
+GOLDEN = os.path.join(
+    os.path.dirname(__file__), "fixtures", "golden_campaign_scorecard.json"
+)
+# measured fields (wall clock, rates derived from it) are excluded from
+# the golden comparison; everything else in the scorecard is a pure
+# function of (campaign, seed, policy) under the sync control plane
+NONDETERMINISTIC = ("wall_s", "installs_per_hour")
+
+
+@pytest.fixture(scope="module")
+def smoke_card():
+    return run_campaign(
+        get_campaign(SMOKE_CAMPAIGN), RedTeamConfig(record_history=True)
+    )
+
+
+class TestSplitPolicy:
+    def test_routes_by_dataclass_field(self):
+        drift, loop_cfg = split_policy(
+            {"cooldown_ticks": 3, "relearn_veto_floor": 0.15}
+        )
+        assert drift["cooldown_ticks"] == 3
+        assert loop_cfg == {"relearn_veto_floor": 0.15}
+        # untouched defaults come from the harness policy, not DriftPolicy
+        assert drift["warmup_ticks"] == DEFAULT_POLICY["warmup_ticks"]
+
+    def test_unknown_key_rejected(self):
+        with pytest.raises(ValueError, match="neither"):
+            split_policy({"sig_noveltyy": 0.1})
+
+
+class TestTrackerIsNotVacuous:
+    """Fabricated violations must be counted — otherwise every green
+    scorecard proves nothing."""
+
+    def test_counts_sticky_veto_flip(self):
+        t = TrustInvariantTracker()
+        fids = np.array([7, 8])
+        t.observe(fids, {"trust": np.array([1.0, 0.3]),
+                         "vetoed": np.array([True, False])})
+        assert t.veto_flips == 0
+        t.observe(fids, {"trust": np.array([0.5, 0.3]),
+                         "vetoed": np.array([False, False])})
+        assert t.veto_flips == 1  # flow 7 un-vetoed after a veto
+
+    def test_counts_pinning_break_both_directions(self):
+        t = TrustInvariantTracker()
+        t.observe(np.array([1, 2]), {
+            "trust": np.array([0.9, 1.0]),  # vetoed-but-not-1.0 AND
+            "vetoed": np.array([True, False]),  # 1.0-but-not-vetoed
+        })
+        assert t.pinning_violations == 2
+
+    def test_clean_stream_counts_nothing(self):
+        t = TrustInvariantTracker()
+        for _ in range(3):
+            t.observe(np.array([1, 2]), {
+                "trust": np.array([1.0, 0.2]),
+                "vetoed": np.array([True, False]),
+            })
+        assert (t.veto_flips, t.pinning_violations) == (0, 0)
+        assert t.packets == 6 and t.vetoed_packets == 3
+
+
+class TestSmokeGate:
+    def test_scorecard_is_green(self, smoke_card):
+        c = smoke_card
+        assert c.passed, c.failures
+        assert c.failures == []
+        assert c.veto_flips == 0
+        assert c.pinning_violations == 0
+        assert c.evictions == 0
+        assert c.installs > 0, "the loop must adapt to the rotation"
+        assert c.installs == c.installs_within_t_cp
+        assert c.rollbacks == 0
+        for rep in c.phases:
+            assert rep.recovery >= c.recovery_floor, rep
+
+    def test_adaptive_beats_static_in_the_attack_phase(self, smoke_card):
+        """The arc is meaningful: frozen tables lose accuracy under the
+        rotation and the closed loop wins it back."""
+        attack = [p for p in smoke_card.phases if p.sig_rotation][0]
+        assert attack.accuracy["adaptive"] > attack.accuracy["static"]
+        assert attack.accuracy["oracle"] > attack.accuracy["static"]
+
+    def test_gate_fails_when_floor_exceeds_replay(self, smoke_card):
+        """Non-vacuity at the scorecard level: the same replay scored
+        against an unattainable bar must fail with the phase named."""
+        base = smoke_card.phases[0].recovery  # == 1.0 pre-rotation
+        assert base >= 1.0
+        card = run_campaign(
+            get_campaign(SMOKE_CAMPAIGN),
+            RedTeamConfig(recovery_floor=1.01),
+        )
+        assert not card.passed
+        assert any("recovery" in f for f in card.failures)
+
+    def test_scorecard_serializes(self, smoke_card):
+        d = smoke_card.as_dict()
+        json.dumps(d)  # artifact-ready
+        assert d["history"], "record_history must keep per-batch decisions"
+        assert len(d["history"]) == sum(p.batches for p in
+                                        get_campaign(SMOKE_CAMPAIGN).phases)
+        # without record_history the key is dropped, not emitted as null
+        slim = run_trace()
+        assert "history" not in slim.as_dict()
+
+    def test_golden_scorecard(self, smoke_card):
+        got = smoke_card.as_dict()
+        for k in NONDETERMINISTIC:
+            got.pop(k)
+        if os.environ.get("REGEN_GOLDEN"):
+            os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+            with open(GOLDEN, "w") as f:
+                json.dump(got, f, indent=2, sort_keys=True)
+                f.write("\n")
+        with open(GOLDEN) as f:
+            want = json.load(f)
+        assert set(got) == set(want)
+        for k in sorted(want):
+            assert got[k] == want[k], f"scorecard field {k!r} drifted"
+
+
+class TestTraceGate:
+    def test_sample_trace_replay_is_green(self):
+        card = run_trace()
+        assert card.passed, card.failures
+        assert card.veto_flips == 0
+        assert card.pinning_violations == 0
+        assert card.evictions == 0
+        # both veto branches exercised (the invariants are non-vacuous)
+        rate = card.phases[0].veto_rate["static"]
+        assert 0 < rate < 1

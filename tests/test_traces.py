@@ -1,0 +1,321 @@
+"""Real-trace replay tier (DESIGN.md §18): the ``chimera-trace-v1`` schema,
+loader validation, and the TraceReplayScenario batching contract.
+
+Deterministic witnesses always run; hypothesis wrappers randomize the same
+invariants where CI installs hypothesis (same split as test_adaptive_loop):
+
+* replay is deterministic and **lossless** — concatenating the emitted
+  batches reproduces the trace's record columns exactly, in both
+  fixed-size and wall-clock-window batching modes;
+* batch dicts match the FlowScenario contract (keys, dtypes, shapes,
+  first_packet semantics) so a trace drops into any engine unchanged;
+* sharding commutes with batching: the per-shard streams partition every
+  unsharded batch by flow_shard owner, batch for batch;
+* loop mode re-keys each cycle into a disjoint ``c << 48`` id space;
+  without ``loop=True`` replay past the end raises TraceExhausted;
+* the loader rejects malformed traces (schema tag, missing meta, alphabet
+  violations, non-monotone timestamps) with the field named.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import FlowScenario, flow_shard
+from repro.data.traces import (
+    SAMPLE_TRACE,
+    TRACE_SCHEMA,
+    Trace,
+    TraceExhausted,
+    TraceMeta,
+    TraceReplayScenario,
+    anonymize_flow_ids,
+    load_trace,
+    make_sample_trace,
+    replay_rounds,
+)
+
+BATCH_KEYS = ("flow_ids", "tokens", "labels", "anomalous", "first_packet")
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return load_trace(SAMPLE_TRACE)
+
+
+def replay_all(trace, **kw):
+    sc = TraceReplayScenario(trace, **kw)
+    return sc, list(sc)
+
+
+def concat(batches):
+    return {
+        k: np.concatenate([b[k] for b in batches]) for k in BATCH_KEYS
+    }
+
+
+# ==========================================================================
+# schema + loader
+# ==========================================================================
+
+class TestSchema:
+    def test_committed_sample_is_valid_and_regenerable(self, sample):
+        """The committed fixture loads, is anonymized, covers both flow
+        populations, and regenerates byte-identically from its seed."""
+        assert sample.meta.anonymized
+        assert sample.n_packets > 500
+        assert 0 < int(sample.anomalous.sum()) < sample.n_packets
+        assert len(sample.meta.anomaly_signature) == 4
+        regen = make_sample_trace()
+        np.testing.assert_array_equal(regen.flow_ids, sample.flow_ids)
+        np.testing.assert_array_equal(regen.tokens, sample.tokens)
+        np.testing.assert_array_equal(regen.ts_us, sample.ts_us)
+
+    def test_save_load_round_trip(self, sample, tmp_path):
+        p = str(tmp_path / "t.json")
+        sample.save(p)
+        back = load_trace(p)
+        assert back.meta == sample.meta
+        for name in ("ts_us", "flow_ids", "tokens", "labels", "anomalous"):
+            np.testing.assert_array_equal(
+                getattr(back, name), getattr(sample, name), err_msg=name
+            )
+
+    def test_loader_rejects_malformed(self, sample, tmp_path):
+        p = str(tmp_path / "t.json")
+        sample.save(p)
+        payload = json.load(open(p))
+
+        def dump(mut):
+            bad = json.loads(json.dumps(payload))
+            mut(bad)
+            q = str(tmp_path / "bad.json")
+            json.dump(bad, open(q, "w"))
+            return q
+
+        with pytest.raises(ValueError, match="schema"):
+            load_trace(dump(lambda d: d.update(schema="pcap")))
+        with pytest.raises(ValueError, match="pkt_len"):
+            load_trace(dump(lambda d: d["meta"].pop("pkt_len")))
+        with pytest.raises(ValueError, match="monotone"):
+            load_trace(dump(
+                lambda d: d["records"]["ts_us"].__setitem__(0, 1 << 40)
+            ))
+        with pytest.raises(ValueError, match="alphabet"):
+            load_trace(dump(
+                lambda d: d["records"]["tokens"][0].__setitem__(0, 9999)
+            ))
+        with pytest.raises(ValueError, match="labels"):
+            load_trace(dump(
+                lambda d: d["records"]["label"].__setitem__(0, -1)
+            ))
+
+    def test_validation_is_in_the_dataclass_not_the_loader(self, sample):
+        """Programmatic construction hits the same checks as JSON."""
+        with pytest.raises(ValueError, match="anomaly_signature"):
+            Trace(
+                meta=dataclasses.replace(
+                    sample.meta, anomaly_signature=(1, 2)
+                ),
+                ts_us=sample.ts_us, flow_ids=sample.flow_ids,
+                tokens=sample.tokens, labels=sample.labels,
+                anomalous=sample.anomalous,
+            )
+        with pytest.raises(ValueError, match="tokens shape"):
+            Trace(meta=sample.meta, ts_us=sample.ts_us,
+                  flow_ids=sample.flow_ids, tokens=sample.tokens[:, :4],
+                  labels=sample.labels, anomalous=sample.anomalous)
+
+    def test_anonymize_is_deterministic_48bit_and_collision_free(self):
+        raw = np.arange(5000, dtype=np.uint64) * 7919 + 3
+        a = anonymize_flow_ids(raw, salt=23)
+        b = anonymize_flow_ids(raw, salt=23)
+        np.testing.assert_array_equal(a, b)
+        assert (anonymize_flow_ids(raw, salt=24) != a).any()
+        assert np.unique(a).size == raw.size  # injective on this domain
+        assert int(a.max()) < 1 << 48  # disjoint from loop-mode offsets
+        assert a.astype(np.int64).min() >= 0
+
+
+# ==========================================================================
+# replay: the FlowScenario batch contract
+# ==========================================================================
+
+class TestReplayContract:
+    def test_batches_match_flow_scenario_dtypes_and_shapes(self, sample):
+        ref = FlowScenario(kind="mix", pkt_len=sample.meta.pkt_len,
+                           packets_per_batch=64, seed=3).next_batch()
+        sc, batches = replay_all(sample, packets_per_batch=64)
+        assert sc.batches_per_cycle == -(-sample.n_packets // 64)
+        for b in batches:
+            assert set(b) == set(ref)
+            P = b["flow_ids"].shape[0]
+            for k in BATCH_KEYS:
+                assert b[k].dtype == ref[k].dtype, k
+            assert b["tokens"].shape == (P, sample.meta.pkt_len)
+
+    def test_concat_of_batches_is_the_trace(self, sample):
+        _, batches = replay_all(sample, packets_per_batch=64)
+        cat = concat(batches)
+        np.testing.assert_array_equal(cat["flow_ids"], sample.flow_ids)
+        np.testing.assert_array_equal(cat["tokens"], sample.tokens)
+        np.testing.assert_array_equal(cat["labels"], sample.labels)
+        np.testing.assert_array_equal(cat["anomalous"], sample.anomalous)
+
+    def test_replay_is_deterministic(self, sample):
+        _, a = replay_all(sample, packets_per_batch=96)
+        _, b = replay_all(sample, packets_per_batch=96)
+        for x, y in zip(a, b):
+            for k in BATCH_KEYS:
+                np.testing.assert_array_equal(x[k], y[k])
+
+    def test_first_packet_marks_exactly_first_occurrences(self, sample):
+        _, batches = replay_all(sample, packets_per_batch=64)
+        cat = concat(batches)
+        seen = set()
+        for fid, first in zip(cat["flow_ids"].tolist(),
+                              cat["first_packet"].tolist()):
+            assert first == (fid not in seen)
+            seen.add(fid)
+
+    def test_window_mode_batches_by_wall_clock(self, sample):
+        w = 20_000  # µs
+        sc, batches = replay_all(sample, window_us=w)
+        assert sc.batches_per_cycle == len(batches)
+        t0 = int(sample.ts_us[0])
+        lo = 0
+        for i, b in enumerate(batches):
+            hi = lo + b["flow_ids"].shape[0]
+            ts = sample.ts_us[lo:hi].astype(np.int64) - t0
+            if ts.size:
+                assert int(ts.min()) >= 0
+                assert int(ts.max()) < (i + 1) * w
+                if i:
+                    assert int(ts.min()) >= i * w - w  # order preserved
+            lo = hi
+        cat = concat(batches)
+        np.testing.assert_array_equal(cat["flow_ids"], sample.flow_ids)
+
+    def test_exhaustion_and_loop_mode(self, sample):
+        sc, batches = replay_all(sample, packets_per_batch=256)
+        assert sc.exhausted
+        with pytest.raises(TraceExhausted, match="loop=True"):
+            sc.next_batch()
+        looped = TraceReplayScenario(sample, packets_per_batch=256,
+                                     loop=True)
+        cycle0 = [looped.next_batch()
+                  for _ in range(looped.batches_per_cycle)]
+        cycle1 = [looped.next_batch()
+                  for _ in range(looped.batches_per_cycle)]
+        for b0, b1 in zip(cycle0, cycle1):
+            # same records, fresh flows: ids offset into the next 48-bit
+            # id space (so engines see a new flow population, not updates)
+            np.testing.assert_array_equal(
+                b1["flow_ids"], b0["flow_ids"] + (1 << 48)
+            )
+            np.testing.assert_array_equal(b1["tokens"], b0["tokens"])
+            np.testing.assert_array_equal(
+                b1["first_packet"], b0["first_packet"]
+            )
+
+    def test_same_flow_packets_stay_sequential(self, sample):
+        """The engine arrival-round contract: within a batch, a flow's
+        packets land in consecutive rounds in record order."""
+        _, batches = replay_all(sample, packets_per_batch=64)
+        for b in batches[:4]:
+            rounds = replay_rounds(b)
+            for r in rounds:
+                assert len(set(b["flow_ids"][r].tolist())) == len(r)
+
+    def test_constructor_validation(self, sample):
+        with pytest.raises(ValueError, match="shard_id"):
+            TraceReplayScenario(sample, shard_id=2, num_shards=2)
+        with pytest.raises(ValueError, match="packets_per_batch"):
+            TraceReplayScenario(sample, packets_per_batch=0)
+        with pytest.raises(ValueError, match="window_us"):
+            TraceReplayScenario(sample, window_us=-1)
+
+
+# ==========================================================================
+# sharding commutes with batching
+# ==========================================================================
+
+def check_shard_partition(trace, num_shards, **kw):
+    full = TraceReplayScenario(trace, **kw)
+    parts = [
+        TraceReplayScenario(trace, shard_id=s, num_shards=num_shards, **kw)
+        for s in range(num_shards)
+    ]
+    assert all(p.batches_per_cycle == full.batches_per_cycle for p in parts)
+    for b in full:
+        owners = flow_shard(b["flow_ids"], num_shards)
+        for s, part in enumerate(parts):
+            bs = part.next_batch()
+            keep = owners == s
+            for k in BATCH_KEYS:
+                np.testing.assert_array_equal(
+                    bs[k], b[k][keep], err_msg=f"shard {s} {k}"
+                )
+
+
+class TestShardPartition:
+    @pytest.mark.parametrize("num_shards", (1, 3))
+    def test_fixed_size_batches(self, sample, num_shards):
+        check_shard_partition(sample, num_shards, packets_per_batch=64)
+
+    def test_window_batches(self, sample):
+        check_shard_partition(sample, 2, window_us=25_000)
+
+
+# ==========================================================================
+# hypothesis wrappers (CI installs hypothesis)
+# ==========================================================================
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.fixture(scope="module")
+    def small(sample):
+        """A short prefix of the sample (hypothesis examples stay fast)."""
+        n = 320
+        return Trace(
+            meta=sample.meta, ts_us=sample.ts_us[:n],
+            flow_ids=sample.flow_ids[:n], tokens=sample.tokens[:n],
+            labels=sample.labels[:n], anomalous=sample.anomalous[:n],
+        )
+
+    class TestReplayProperties:
+        @settings(max_examples=20, deadline=None)
+        @given(ppb=st.integers(1, 400))
+        def test_lossless_at_any_batch_size(self, small, ppb):
+            _, batches = replay_all(small, packets_per_batch=ppb)
+            cat = concat(batches)
+            np.testing.assert_array_equal(cat["flow_ids"], small.flow_ids)
+            np.testing.assert_array_equal(cat["tokens"], small.tokens)
+
+        @settings(max_examples=15, deadline=None)
+        @given(
+            num_shards=st.integers(1, 5),
+            ppb=st.integers(8, 200),
+            window=st.sampled_from((0, 7_000, 40_000)),
+        )
+        def test_shard_partition_any_geometry(self, small, num_shards,
+                                              ppb, window):
+            check_shard_partition(small, num_shards,
+                                  packets_per_batch=ppb, window_us=window)
+
+        @settings(max_examples=15, deadline=None)
+        @given(salt=st.integers(0, 2**32), n=st.integers(1, 500))
+        def test_anonymize_keeps_ids_48bit_and_distinct(self, salt, n):
+            raw = np.arange(n, dtype=np.uint64) * 2654435761 + 17
+            a = anonymize_flow_ids(raw, salt=salt)
+            assert np.unique(a).size == n
+            assert int(a.max()) < 1 << 48
